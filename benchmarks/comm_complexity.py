@@ -1,0 +1,53 @@
+"""Corollaries 1 & 2: measured rounds-to-epsilon vs closed-form predictions.
+
+For a grid of compression levels, measures T_eps = rounds until
+f(x^t) - f* <= eps and reports the ratio to the theory complexity
+(constant factors absorbed; the *scaling* in alpha / omega is the claim).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import comm_model, compressors as C
+from repro.core import ef21p, marina_p, problems, stepsizes
+
+
+def rounds_to_eps(hist, eps):
+    for t, f in zip(hist["t"], hist["f_x"]):
+        if f <= eps:
+            return t + 1
+    return None
+
+
+def bench():
+    rows = []
+    prob = problems.generate_problem(n=8, d=128, noise_scale=1.0, seed=0)
+    eps = 0.05 * float(prob.f(prob.x0))
+    d, n = prob.d, prob.n
+
+    for k in (4, 16, 64):
+        alpha = k / d
+        ss = stepsizes.EF21PPolyak(alpha=alpha, f_star=0.0)
+        t0 = time.time()
+        h = ef21p.run(prob, C.TopK(k=k), ss, T=4000)
+        dt = (time.time() - t0) * 1e6
+        T_meas = rounds_to_eps(h, eps) or -1
+        T_theory = comm_model.ef21p_iteration_complexity(prob.L0, prob.R0_sq, alpha, eps)
+        rows.append((f"corollary1/ef21p/k{k}/rounds", dt, T_meas))
+        rows.append((f"corollary1/ef21p/k{k}/theory_ratio", dt,
+                     T_meas / T_theory if T_meas > 0 else -1))
+
+    for k in (4, 16, 64):
+        p = k / d
+        omega = d / k - 1.0
+        ss = stepsizes.MarinaPPolyak(omega=omega, p=p, f_star=0.0)
+        t0 = time.time()
+        h = marina_p.run(prob, mode="ind", k=k, p=p, stepsize=ss, T=4000)
+        dt = (time.time() - t0) * 1e6
+        T_meas = rounds_to_eps(h, eps) or -1
+        T_theory = comm_model.marina_p_iteration_complexity(
+            prob.L0, prob.L0_tilde, prob.R0_sq, omega, d, float(k), eps)
+        rows.append((f"corollary2/marina_ind/k{k}/rounds", dt, T_meas))
+        rows.append((f"corollary2/marina_ind/k{k}/theory_ratio", dt,
+                     T_meas / T_theory if T_meas > 0 else -1))
+    return rows

@@ -1,0 +1,42 @@
+"""Pallas-kernel microbenchmarks (interpret mode on CPU — correctness-path
+timings; the real perf story is the dry-run roofline, §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench():
+    rows = []
+    d = 1 << 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    rows.append(("kernels/block_topk/pallas_interp",
+                 _time(ops.block_topk, x, k_per_block=64, block=1024), d))
+    rows.append(("kernels/block_topk/jnp_ref",
+                 _time(jax.jit(lambda v: ref.block_topk_ref(v, k_per_block=64, block=1024)), x), d))
+    rows.append(("kernels/bernk/pallas_interp",
+                 _time(ops.bernk, x, keep_prob=0.1, seed=3), d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    rot = jnp.int32(2)
+    rows.append(("kernels/rotk_apply/pallas_interp",
+                 _time(ops.rotk_apply, w, x, rot, n=16, worker=3), d))
+    A = jax.random.normal(jax.random.PRNGKey(2), (1024, 1024))
+    xx = jax.random.normal(jax.random.PRNGKey(3), (1024,))
+    rows.append(("kernels/l1_subgrad/pallas_interp", _time(ops.l1_subgrad, A, xx), 1024))
+    rows.append(("kernels/l1_subgrad/jnp_ref",
+                 _time(jax.jit(ref.l1_subgrad_ref), A, xx), 1024))
+    return rows

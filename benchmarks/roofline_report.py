@@ -1,0 +1,52 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline) from the
+JSON records produced by launch/dryrun.py."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.environ.get("DRYRUN_DIR", "runs/dryrun_v2")
+
+
+def load(dirpath=DEFAULT_DIR, mesh="16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def markdown_table(recs):
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "MODEL_FLOPS | useful ratio | bytes/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        dev_bytes = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+            f"{t['collective_s']:.3e} | {t['dominant'].replace('_s','')} | "
+            f"{r['model_flops']:.3e} | "
+            f"{(r['useful_flops_ratio'] or 0):.3f} | {dev_bytes:.3e} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def bench(dirpath=DEFAULT_DIR):
+    rows = []
+    for r in load(dirpath):
+        t = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/bound_s", r["t_compile_s"] * 1e6,
+                     t["bound_s"]))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_DIR
+    print(markdown_table(load(d)))

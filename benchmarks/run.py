@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  fig1_convergence   Fig. 1/7   EF21-P vs MARINA-P (same/ind/perm), const/Polyak
+  table2_sigma       Table 2    sigma_A per (n, noise scale), paper sizes
+  stepsize_grid      Table 3/6  tuned Polyak factor grid
+  comm_complexity    Cor. 1/2   rounds-to-eps vs closed-form complexity
+  kernel_bench       —          Pallas kernel (interpret) microbenchmarks
+  roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
+
+Select subsets: ``python -m benchmarks.run fig1 table2 ...`` (default: all
+except roofline_report when no dry-run records exist).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        comm_complexity,
+        fig1_convergence,
+        kernel_bench,
+        roofline_report,
+        stepsize_grid,
+        table2_sigma,
+    )
+
+    suites = {
+        "fig1": fig1_convergence.bench,
+        "table2": table2_sigma.bench,
+        "stepsize_grid": stepsize_grid.bench,
+        "comm_complexity": comm_complexity.bench,
+        "kernels": kernel_bench.bench,
+        "roofline": roofline_report.bench,
+    }
+    selected = [a for a in sys.argv[1:] if a in suites]
+    if not selected:
+        selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels"]
+        if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
+            selected.append("roofline")
+    print("name,us_per_call,derived")
+    for key in selected:
+        try:
+            for name, us, derived in suites[key]():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{key}/FAILED,0,nan")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Pytree checkpointing without orbax: npz payload + json tree manifest.
+
+Leaves are stored flat (key = /-joined tree path) in a single compressed
+``.npz``; structure and dtypes round-trip exactly. Atomic via rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(jax.tree_util.keystr((p,)).strip("[]'\".") for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0, extra: Dict | None = None):
+    arrays, _ = _flatten_with_paths(tree)
+    meta = {"step": int(step), "keys": sorted(arrays.keys()), "extra": extra or {}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez_compressed(tmp, __meta__=json.dumps(meta), **arrays)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path, allow_pickle=False) as zf:
+        meta = json.loads(str(zf["__meta__"]))
+        arrays = {k: zf[k] for k in meta["keys"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, leaf in flat:
+        key = "/".join(jax.tree_util.keystr((p,)).strip("[]'\".") for p in path_)
+        arr = arrays[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

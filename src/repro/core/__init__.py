@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+* compressors — Definitions 2/3 operator families (TopK, RandK, PermK, ...)
+* stepsizes   — constant / decreasing / Polyak schedules + theory constants
+* ef21p       — distributed EF21-P (Algorithm 1)
+* marina_p    — non-smooth MARINA-P (Algorithm 2), three broadcast modes
+* subgradient — baseline distributed SM (eq. 5)
+* problems    — the paper's L1 workload + Algorithm 3 datagen
+* comm_model  — Definition 1/4 bit accounting + Corollary 1/2 predictions
+* distributed — shard_map SPMD realization of both algorithms
+"""
+from . import comm_model, compressors, distributed, ef21p, marina_p, problems, stepsizes, subgradient  # noqa: F401

@@ -1,0 +1,180 @@
+"""MARINA-P for non-smooth objectives (Algorithm 2).
+
+Per round t:
+    workers:  g_i = df_i(w_i^t)                  -> server   (uplink, exact)
+    server:   gamma_t from schedule (constant / decreasing / Polyak (23))
+              x^{t+1} = x^t - gamma_t * mean_i g_i
+              c^t ~ Bernoulli(p)
+              c=1: send x^{t+1} to all workers          (dense broadcast)
+              c=0: send Q_i^t(x^{t+1} - x^t) to worker i (per-worker message)
+    workers:  w_i^{t+1} = x^{t+1}  or  w_i^t + Q_i^t(x^{t+1} - x^t)
+
+Three broadcast modes (Section 4.1):
+  * ``same``: one RandK instance, identical message to every worker;
+  * ``ind``:  independent RandK per worker (key folded with worker index);
+  * ``perm``: PermK correlated family — (1/n) sum_i Q_i(x) = x exactly.
+
+State is (x, W) with W = stack of worker shifts [n, d]. The Lyapunov function
+of Theorem 2 is exposed for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import PermK, RandK, UnbiasedCompressor
+from .comm_model import CommLedger, CommModel
+from .problems import L1Problem
+from .stepsizes import Stepsize, marina_p_lambda_star
+
+
+class MarinaPState(NamedTuple):
+    x: jax.Array  # server iterate [d]
+    W: jax.Array  # worker shifts [n, d]
+    t: jax.Array
+
+
+def init(x0: jax.Array, n: int) -> MarinaPState:
+    """w_i^0 = x^0 for all i (Algorithm 2, line 1)."""
+    return MarinaPState(
+        x=x0, W=jnp.broadcast_to(x0, (n, x0.shape[-1])), t=jnp.zeros((), jnp.int32)
+    )
+
+
+def lyapunov(
+    state: MarinaPState,
+    x_star: jax.Array,
+    *,
+    L0_bar: float,
+    L0_tilde: float,
+    omega: float,
+    p: float,
+) -> jax.Array:
+    lam = marina_p_lambda_star(L0_bar, L0_tilde, omega, p)
+    drift = jnp.mean(jnp.sum((state.W - state.x) ** 2, axis=-1))
+    return jnp.sum((state.x - x_star) ** 2) + drift / (lam * p)
+
+
+def make_broadcast(mode: str, n: int, k: int):
+    """Return (fn(key, delta) -> Q of shape [n, d], omega(d))."""
+    if mode == "same":
+        comp = RandK(k=k)
+
+        def bcast(key, delta):
+            q = comp(key, delta)
+            return jnp.broadcast_to(q, (n,) + delta.shape)
+
+        return bcast, comp.omega
+    if mode == "ind":
+        comp = RandK(k=k)
+
+        def bcast(key, delta):
+            keys = jax.random.split(key, n)
+            return jax.vmap(lambda kk: comp(kk, delta))(keys)
+
+        return bcast, comp.omega
+    if mode == "perm":
+        def bcast(key, delta):
+            d = delta.shape[-1]
+            q = d // n
+            perm = jax.random.permutation(key, d)
+            # worker i keeps block i of the permutation, scaled by n
+            def one(i):
+                block = jax.lax.dynamic_slice(perm, (i * q,), (q,))
+                return jnp.zeros_like(delta).at[block].set(1.0)
+
+            masks = jax.vmap(one)(jnp.arange(n))
+            rem = d - q * n
+            if rem:
+                tail = jax.lax.dynamic_slice(perm, (q * n,), (rem,))
+                masks = masks.at[0].set(masks[0] + jnp.zeros_like(delta).at[tail].set(1.0))
+            return masks * delta[None, :] * n
+
+        return bcast, lambda d: float(n - 1)
+    raise ValueError(f"unknown broadcast mode: {mode}")
+
+
+def make_step(
+    problem: L1Problem, mode: str, k: int, p: float, stepsize: Stepsize
+):
+    """Build a jittable round: (state, key) -> (state, metrics)."""
+    n = problem.n
+    bcast, _ = make_broadcast(mode, n, k)
+
+    def step(state: MarinaPState, key):
+        k_bern, k_comp = jax.random.split(key)
+        # --- workers: subgradients at their own shifts -----------------------
+        g_all = problem.subgrad_all(state.W)  # [n, d]
+        g = jnp.mean(g_all, axis=0)
+        aux = {
+            "f_w": jnp.mean(problem.f_all(state.W)),
+            "g_norm_sq": jnp.sum(g**2),
+            "g_sq_mean": jnp.mean(jnp.sum(g_all**2, axis=-1)),
+        }
+        gamma = stepsize(state.t, aux)
+        x_new = state.x - gamma * g
+        # --- downlink ---------------------------------------------------------
+        c = jax.random.bernoulli(k_bern, p)
+        Q = bcast(k_comp, x_new - state.x)  # [n, d]
+        W_compressed = state.W + Q
+        W_new = jnp.where(c, jnp.broadcast_to(x_new, state.W.shape), W_compressed)
+        metrics = {
+            "f_x": problem.f(x_new),
+            "f_w": aux["f_w"],
+            "gamma": gamma,
+            "full_sync": c.astype(jnp.float32),
+            "q_nnz_mean": jnp.mean(jnp.sum(Q != 0, axis=-1).astype(jnp.float32)),
+            "drift": jnp.mean(jnp.sum((W_new - x_new) ** 2, axis=-1)),
+        }
+        return MarinaPState(x=x_new, W=W_new, t=state.t + 1), metrics
+
+    return step
+
+
+def run(
+    problem: L1Problem,
+    *,
+    mode: str,
+    k: int,
+    p: float,
+    stepsize: Stepsize,
+    T: Optional[int] = None,
+    bit_budget: Optional[float] = None,
+    seed: int = 0,
+    record_every: int = 1,
+):
+    """Host loop; stops on T rounds or per-worker downlink bit budget."""
+    assert T is not None or bit_budget is not None
+    cm = CommModel(d=problem.d)
+    ledger = CommLedger(model=cm)
+    step = jax.jit(make_step(problem, mode, k, p, stepsize))
+    state = init(problem.x0, problem.n)
+    key = jax.random.PRNGKey(seed)
+    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [], "drift": []}
+    t = 0
+    while True:
+        if T is not None and t >= T:
+            break
+        if bit_budget is not None and ledger.s2w_bits >= bit_budget:
+            break
+        key, sub = jax.random.split(key)
+        state, m = step(state, sub)
+        if float(m["full_sync"]) > 0:
+            ledger.log_s2w_dense()
+        else:
+            ledger.log_s2w_sparse(float(m["q_nnz_mean"]))
+        ledger.tick()
+        if t % record_every == 0:
+            hist["t"].append(t)
+            hist["f_x"].append(float(m["f_x"]))
+            hist["f_w"].append(float(m["f_w"]))
+            hist["gamma"].append(float(m["gamma"]))
+            hist["drift"].append(float(m["drift"]))
+            hist["s2w_bits"].append(ledger.s2w_bits)
+        t += 1
+    hist["final_state"] = state
+    hist["ledger"] = ledger
+    return hist

@@ -1,0 +1,79 @@
+"""Baseline distributed subgradient method SM (paper eq. (5)).
+
+x^{t+1} = x^t - (gamma_t/n) sum_i df_i(x^t); the server broadcasts the full
+x^{t+1} (dense downlink, 64*d bits/worker/round). This is the comparison
+floor of Corollaries 1 & 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .comm_model import CommLedger, CommModel
+from .problems import L1Problem
+from .stepsizes import Stepsize
+
+
+class SMState(NamedTuple):
+    x: jax.Array
+    t: jax.Array
+
+
+def init(x0: jax.Array) -> SMState:
+    return SMState(x=x0, t=jnp.zeros((), jnp.int32))
+
+
+def make_step(problem: L1Problem, stepsize: Stepsize):
+    def step(state: SMState, key):
+        xs = jnp.broadcast_to(state.x, (problem.n, problem.d))
+        g_all = problem.subgrad_all(xs)
+        g = jnp.mean(g_all, axis=0)
+        aux = {
+            "f_w": problem.f(state.x),
+            "g_norm_sq": jnp.sum(g**2),
+            "g_sq_mean": jnp.mean(jnp.sum(g_all**2, axis=-1)),
+        }
+        gamma = stepsize(state.t, aux)
+        x_new = state.x - gamma * g
+        metrics = {"f_x": problem.f(x_new), "gamma": gamma}
+        return SMState(x=x_new, t=state.t + 1), metrics
+
+    return step
+
+
+def run(
+    problem: L1Problem,
+    stepsize: Stepsize,
+    *,
+    T: Optional[int] = None,
+    bit_budget: Optional[float] = None,
+    seed: int = 0,
+    record_every: int = 1,
+):
+    assert T is not None or bit_budget is not None
+    ledger = CommLedger(model=CommModel(d=problem.d))
+    step = jax.jit(make_step(problem, stepsize))
+    state = init(problem.x0)
+    key = jax.random.PRNGKey(seed)
+    hist = {"t": [], "f_x": [], "gamma": [], "s2w_bits": []}
+    t = 0
+    while True:
+        if T is not None and t >= T:
+            break
+        if bit_budget is not None and ledger.s2w_bits >= bit_budget:
+            break
+        key, sub = jax.random.split(key)
+        state, m = step(state, sub)
+        ledger.log_s2w_dense()
+        ledger.tick()
+        if t % record_every == 0:
+            hist["t"].append(t)
+            hist["f_x"].append(float(m["f_x"]))
+            hist["gamma"].append(float(m["gamma"]))
+            hist["s2w_bits"].append(ledger.s2w_bits)
+        t += 1
+    hist["final_state"] = state
+    hist["ledger"] = ledger
+    return hist

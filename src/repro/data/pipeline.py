@@ -1,0 +1,66 @@
+"""Deterministic synthetic token pipeline with sharded global batches.
+
+Tokens are generated per (step, worker) from folded PRNG keys, so every
+worker/process materializes exactly its own shard with no data movement —
+the standard trick for synthetic-data scale tests. A Zipf-ish skew makes the
+distribution non-uniform (so losses move under training).
+
+``batch_specs`` returns the ShapeDtypeStructs the dry-run lowers against
+(the modality-frontend stub of DESIGN.md §4: audio/vlm get precomputed
+token/patch embeddings of the right shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _skewed_tokens(key, shape, vocab):
+    """Zipf-flavored token draw: u^4 concentrates mass on small ids."""
+    u = jax.random.uniform(key, shape)
+    return jnp.minimum((u**4 * vocab).astype(jnp.int32), vocab - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    cfg: ModelConfig
+    n_workers: int
+    batch_per_worker: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        W, B, S = self.n_workers, self.batch_per_worker, self.seq_len
+        cfg = self.cfg
+        if cfg.num_codebooks:
+            toks = _skewed_tokens(key, (W, B, cfg.num_codebooks, S), cfg.vocab_size)
+            return {"tokens": toks}
+        if cfg.num_patches:
+            S_text = S - cfg.num_patches
+            assert S_text > 1, "seq too short for the patch stub"
+            k1, k2 = jax.random.split(key)
+            return {
+                "tokens": _skewed_tokens(k1, (W, B, S_text), cfg.vocab_size),
+                "patches": (jax.random.normal(k2, (W, B, cfg.num_patches, cfg.d_model), jnp.bfloat16)),
+            }
+        return {"tokens": _skewed_tokens(key, (W, B, S), cfg.vocab_size)}
+
+
+def batch_specs(cfg: ModelConfig, n_workers: int, batch_per_worker: int, seq_len: int):
+    """ShapeDtypeStructs for one training batch (dry-run input stand-ins)."""
+    W, B, S = n_workers, batch_per_worker, seq_len
+    if cfg.num_codebooks:
+        return {"tokens": jax.ShapeDtypeStruct((W, B, cfg.num_codebooks, S), jnp.int32)}
+    if cfg.num_patches:
+        S_text = S - cfg.num_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((W, B, S_text), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((W, B, cfg.num_patches, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((W, B, S), jnp.int32)}

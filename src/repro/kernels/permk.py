@@ -1,0 +1,47 @@
+"""RotK (cyclic-partition PermK) apply kernel (Pallas TPU).
+
+Fuses the MARINA-P worker update  w += Q_i(delta)  where
+Q_i(delta)_j = n * delta_j * [j mod n == (worker + r) mod n]
+into a single VMEM pass: iota-compare mask, scale, accumulate. No index
+arrays ever touch HBM — the message is materialized from (r, worker, n)
+(zero-byte correlated broadcast, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rotk_apply_kernel(w_ref, delta_ref, rot_ref, out_ref, *, n: int, worker: int, block: int):
+    i = pl.program_id(0)
+    w = w_ref[...]
+    delta = delta_ref[...]
+    r = rot_ref[0]
+    local = jax.lax.broadcasted_iota(jnp.int32, w.shape, 1)
+    gidx = i * block + local
+    keep = (gidx % n) == ((worker + r) % n)
+    out_ref[...] = (w + jnp.where(keep, delta * n, 0.0)).astype(out_ref.dtype)
+
+
+def rotk_apply(w: jax.Array, delta: jax.Array, rotation: jax.Array, *, n: int,
+               worker: int, block: int = 1024, interpret: bool = True) -> jax.Array:
+    """w, delta: [d]; rotation: int32 scalar array. Returns w + Q_i(delta)."""
+    d = w.shape[-1]
+    assert d % block == 0, (d, block)
+    nblocks = d // block
+    out = pl.pallas_call(
+        functools.partial(_rotk_apply_kernel, n=n, worker=worker, block=block),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), w.dtype),
+        interpret=interpret,
+    )(w.reshape(nblocks, block), delta.reshape(nblocks, block), rotation.reshape(1))
+    return out.reshape(d)

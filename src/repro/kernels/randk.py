@@ -1,0 +1,61 @@
+"""Counter-based Bernoulli-K sparsification kernel (Pallas TPU).
+
+The jit-friendly RandK stand-in (BernK, omega = d/k - 1) regenerated from a
+counter hash *inside* the kernel — zero HBM traffic for randomness, the
+TPU-native way to materialize the paper's downlink messages from shared
+seeds (DESIGN.md §2). Hash: 3-round xorshift-multiply of (seed, worker,
+global index); ref.py implements the identical hash in jnp so outputs match
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_M1 = 2654435761
+_M2 = 2246822519
+
+
+def hash_uniform(idx: jax.Array, seed, worker) -> jax.Array:
+    """Deterministic per-index uniform in [0,1). idx: uint32 array."""
+    m1 = jnp.asarray(_M1, jnp.uint32)
+    m2 = jnp.asarray(_M2, jnp.uint32)
+    h = idx.astype(jnp.uint32) * m1
+    h = h ^ (jnp.asarray(seed % (1 << 32), jnp.uint32) + jnp.asarray(worker, jnp.uint32) * m2)
+    h = h ^ (h >> 15)
+    h = h * m2
+    h = h ^ (h >> 13)
+    h = h * m1
+    h = h ^ (h >> 16)
+    return h.astype(jnp.float32) * (1.0 / 4294967296.0)
+
+
+def _bernk_kernel(x_ref, out_ref, *, keep_prob: float, seed: int, worker: int, block: int):
+    i = pl.program_id(0)
+    x = x_ref[...]  # [1, b]
+    local = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    gidx = (i * block + local).astype(jnp.uint32)
+    u = hash_uniform(gidx, seed, worker)
+    keep = u < keep_prob
+    out_ref[...] = jnp.where(keep, x / keep_prob, 0.0).astype(out_ref.dtype)
+
+
+def bernk_compress(x: jax.Array, *, keep_prob: float, seed: int, worker: int = 0,
+                   block: int = 1024, interpret: bool = True) -> jax.Array:
+    d = x.shape[-1]
+    assert d % block == 0, (d, block)
+    nblocks = d // block
+    out = pl.pallas_call(
+        functools.partial(
+            _bernk_kernel, keep_prob=keep_prob, seed=seed, worker=worker, block=block
+        ),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), x.dtype),
+        interpret=interpret,
+    )(x.reshape(nblocks, block))
+    return out.reshape(d)

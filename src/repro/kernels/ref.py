@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every kernel in this package (bit-exact semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .randk import hash_uniform  # the hash itself is plain jnp — shared
+
+
+def block_topk_ref(x: jax.Array, *, k_per_block: int, block: int) -> jax.Array:
+    """Exact per-block magnitude top-k (lax.top_k tie-breaking: first index)."""
+    d = x.shape[-1]
+    assert d % block == 0
+    xb = x.reshape(-1, block)
+    _, idx = jax.lax.top_k(jnp.abs(xb), k_per_block)
+    mask = jnp.zeros_like(xb, dtype=bool)
+    mask = jax.vmap(lambda m, i: m.at[i].set(True))(mask, idx)
+    return jnp.where(mask, xb, 0).reshape(d)
+
+
+def bernk_ref(x: jax.Array, *, keep_prob: float, seed: int, worker: int = 0) -> jax.Array:
+    idx = jnp.arange(x.shape[-1], dtype=jnp.uint32)
+    u = hash_uniform(idx, seed, worker)
+    return jnp.where(u < keep_prob, x / keep_prob, 0.0).astype(x.dtype)
+
+
+def rotk_apply_ref(w, delta, rotation, *, n: int, worker: int):
+    idx = jnp.arange(w.shape[-1], dtype=jnp.int32)
+    keep = (idx % n) == ((worker + rotation) % n)
+    return (w + jnp.where(keep, delta * n, 0.0)).astype(w.dtype)
+
+
+def l1_subgrad_ref(A: jax.Array, x: jax.Array) -> jax.Array:
+    y = A.astype(jnp.float32) @ x.astype(jnp.float32)
+    s = jnp.where(y >= 0, 1.0, -1.0)
+    return A.astype(jnp.float32).T @ s

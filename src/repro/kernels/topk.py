@@ -1,0 +1,60 @@
+"""Block-local magnitude TopK compression kernel (Pallas TPU).
+
+TPU adaptation of the paper's TopK contractive compressor (DESIGN.md §2):
+global top-k needs a sequential selection over d elements; the TPU-native
+variant selects the top ``k`` per contiguous block of ``b`` elements, one
+block per grid step, entirely in VMEM. Contraction factor alpha = k/b
+(Definition 3 holds per block, hence globally).
+
+Selection is exact iterative extraction: k rounds of (masked) argmax with
+first-index tie-breaking — bit-identical to ``jax.lax.top_k`` semantics, so
+the pure-jnp oracle in ref.py matches exactly.
+
+Tiling: x is viewed as [nblocks, b]; BlockSpec (1, b) keeps one block in
+VMEM per grid step; b must be a multiple of 128 (lane width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_block_kernel(x_ref, out_ref, *, k: int):
+    x = x_ref[...]  # [1, b]
+    b = x.shape[-1]
+    absx = jnp.abs(x)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def body(_, carry):
+        remaining, keep = carry
+        # first-index tie-break: pick smallest idx among maxima
+        m = jnp.max(remaining)
+        is_max = remaining == m
+        first = jnp.min(jnp.where(is_max, idx, b))
+        sel = idx == first
+        return remaining * (1.0 - sel) - sel, keep | sel
+
+    keep0 = jnp.zeros(x.shape, dtype=jnp.bool_)
+    _, keep = jax.lax.fori_loop(0, k, body, (absx.astype(jnp.float32), keep0))
+    out_ref[...] = jnp.where(keep, x, 0.0).astype(out_ref.dtype)
+
+
+def block_topk_compress(x: jax.Array, *, k_per_block: int, block: int = 1024,
+                        interpret: bool = True) -> jax.Array:
+    """x: [d] (d % block == 0). Returns the sparsified vector (dense layout)."""
+    d = x.shape[-1]
+    assert d % block == 0, (d, block)
+    nblocks = d // block
+    xb = x.reshape(nblocks, block)
+    out = pl.pallas_call(
+        functools.partial(_topk_block_kernel, k=k_per_block),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), x.dtype),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(d)

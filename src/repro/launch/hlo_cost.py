@@ -1,0 +1,220 @@
+"""Trip-count-aware cost analysis over optimized (per-device) HLO text.
+
+``compiled.cost_analysis()`` counts every while body ONCE and reports
+per-partition numbers, which silently undercounts scanned layer stacks
+(verified experimentally — see EXPERIMENTS.md §Dry-run). This module
+re-derives per-device totals from ``compiled.as_text()``:
+
+* flops       — 2 * |result| * |contracted dims| for every ``dot``;
+                fusions/calls recursed, while bodies scaled by
+                ``backend_config known_trip_count``.
+* bytes       — HBM-traffic proxy: sum of (operands + result) sizes of every
+                materializing op at computation top level (fusion internals
+                excluded — they live in registers/VMEM), again trip-scaled.
+* collectives — result bytes per collective kind, trip-scaled (a collective
+                inside a scanned layer runs every iteration).
+
+All numbers are per device (the compiled module is the SPMD per-device
+program); multiply by ``mesh.size`` for global totals.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+# ops that do not read/write HBM on their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+# control-flow ops whose bytes are accounted inside their computations
+_CONTROL_OPS = {"while", "conditional", "call"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self._parse(hlo_text)
+        self.entry = self._entry_name
+        self._cache: Dict[str, dict] = {}
+
+    # -- parsing ---------------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        self._entry_name = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", stripped)
+            if m and not stripped.startswith("%param"):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self._entry_name = cur
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is not None and stripped:
+                self.computations[cur].append(stripped)
+
+    # -- per-computation analysis -------------------------------------------------
+    def _analyze(self, comp: str) -> dict:
+        if comp in self._cache:
+            return self._cache[comp]
+        # placeholder to break recursion on malformed input
+        self._cache[comp] = {"flops": 0.0, "bytes": 0.0,
+                             "coll": {k: 0.0 for k in COLLECTIVE_KINDS}}
+        lines = self.computations.get(comp, [])
+        symtab: Dict[str, str] = {}
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, type_str, op = dm.groups()
+            symtab[name] = type_str
+
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, type_str, op = dm.groups()
+            result_bytes = _type_bytes(type_str)
+            # operand names: everything after the op's open paren
+            paren = line.find(op + "(")
+            operand_str = line[paren : line.find(")", paren) + 1] if paren >= 0 else ""
+            operands = _OPERAND_RE.findall(operand_str)
+            operand_bytes = sum(_type_bytes(symtab.get(o, "")) for o in operands)
+
+            if op == "dot":
+                dims = _shape_dims(type_str)
+                out_elems = math.prod(dims) if dims else 1
+                lhs = operands[0] if operands else None
+                lhs_dims = _shape_dims(symtab.get(lhs, "")) if lhs else []
+                cm = _CONTRACT_RE.search(line)
+                contract = 1
+                if cm and lhs_dims:
+                    for i in [int(x) for x in cm.group(1).split(",") if x]:
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+                flops += 2.0 * out_elems * contract
+                bytes_ += result_bytes + operand_bytes
+            elif op == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    sub = self._analyze(cm.group(1))
+                    flops += sub["flops"]  # dots inside fusions still run on MXU
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += sub["coll"][k]
+                bytes_ += result_bytes + operand_bytes
+            elif op == "while":
+                bm, cm = _BODY_RE.search(line), _COND_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                body = self._analyze(bm.group(1)) if bm else None
+                cond = self._analyze(cm.group(1)) if cm else None
+                for sub in (body, cond):
+                    if sub is None:
+                        continue
+                    flops += trip * sub["flops"]
+                    bytes_ += trip * sub["bytes"]
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += trip * sub["coll"][k]
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    subs = [self._analyze(b.strip().lstrip("%")) for b in bm.group(1).split(",")]
+                    if subs:
+                        # worst case branch
+                        flops += max(s["flops"] for s in subs)
+                        bytes_ += max(s["bytes"] for s in subs)
+                        for k in COLLECTIVE_KINDS:
+                            coll[k] += max(s["coll"][k] for s in subs)
+            elif op == "call" or op == "async-start":
+                cm = _CALLS_RE.search(line) or re.search(r"to_apply=%([\w.\-]+)", line)
+                if cm:
+                    sub = self._analyze(cm.group(1))
+                    flops += sub["flops"]
+                    bytes_ += sub["bytes"]
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += sub["coll"][k]
+            elif any(op.startswith(k) for k in COLLECTIVE_KINDS):
+                kind = next(k for k in COLLECTIVE_KINDS if op.startswith(k))
+                if not op.endswith("-done"):  # avoid double count of async pairs
+                    coll[kind] += result_bytes
+                    bytes_ += result_bytes + operand_bytes
+            elif op in ("dynamic-slice", "gather"):
+                # reads only the sliced/gathered region, not the whole operand
+                bytes_ += 2 * result_bytes
+            elif op in ("dynamic-update-slice", "scatter"):
+                # read-modify-write of the update region only
+                upd = _type_bytes(symtab.get(operands[1], "")) if len(operands) > 1 else result_bytes
+                bytes_ += 2 * upd
+            elif op in _FREE_OPS or op in _CONTROL_OPS:
+                pass
+            else:
+                # generic materializing op (copy, reduce, sort, ...)
+                bytes_ += result_bytes + operand_bytes
+
+        out = {"flops": flops, "bytes": bytes_, "coll": coll}
+        self._cache[comp] = out
+        return out
+
+    def totals(self) -> dict:
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {k: 0.0 for k in COLLECTIVE_KINDS}}
+        t = self._analyze(self.entry)
+        t = dict(t)
+        t["coll"] = dict(t["coll"])
+        t["coll_total"] = sum(t["coll"].values())
+        return t
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloCost(hlo_text).totals()

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs (DESIGN.md §5).
+
+Rules are name-based over tree paths and validated against actual leaf
+shapes (an axis is only sharded if its size divides the mesh axis size —
+otherwise it is left replicated, e.g. 36 q-heads never shard but the
+flattened 4608 projection dim does).
+
+Parameter layouts:
+* ``worker``  — leading W axis over the worker mesh axes (= ("pod","data")
+                flattened); inner dims over "model" (MARINA-P per-worker
+                replicas; classic DP memory footprint).
+* ``server``  — fp32 master + optimizer moments: ZeRO-1-style, sharded over
+                the data axes (fsdp) AND "model" where divisible.
+* ``serve``   — inference params: fsdp over (data axes, "model") jointly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# names whose last dim shards over "model" (column-parallel)
+_COL = {
+    "wq", "wk", "wv", "w_in", "w_gate", "w_r", "w_k", "w_v", "w_g",
+    "cm_k", "cm_r", "in_proj", "w_dkv", "w_krope", "w_uk", "w_uv",
+    "w_lora_a", "w_lora_b", "router", "conv_w", "unembed",
+}
+# names whose second-to-last dim shards over "model" (row-parallel)
+_ROW = {"wo", "w_out", "out_proj", "cm_v", "embed"}
+# always replicated (small vectors / scalars)
+_REP = {"scale", "w0", "u", "A_log", "D", "dt_bias", "conv_b", "mu", "cm_mu", "count"}
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    if "wk" in mesh.axis_names:  # hierarchical (§Perf C4)
+        return ("wk", "data")
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def worker_axis_of(mesh: Mesh):
+    if "wk" in mesh.axis_names:
+        return "wk"
+    dp = dp_axes_of(mesh)
+    return dp[0] if len(dp) == 1 else dp
+
+
+def worker_fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that FSDP-shard *inside* one worker's replica (hierarchical only)."""
+    return ("data",) if "wk" in mesh.axis_names else ()
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _base_spec(path_str: str, shape: Tuple[int, ...], model_size: int) -> list:
+    """Per-leaf spec (list of axis names / None), 'model' placements only."""
+    name = path_str.split("/")[-1]
+    spec: list = [None] * len(shape)
+    if name in _REP or not shape:
+        return spec
+
+    def try_shard(dim_idx):
+        if shape[dim_idx] % model_size == 0 and shape[dim_idx] >= model_size:
+            spec[dim_idx] = "model"
+
+    is_expert = ("moe" in path_str and "shared" not in path_str
+                 and name in ("w_in", "w_gate", "w_out") and len(shape) >= 3)
+    if is_expert:
+        try_shard(-3)  # expert-parallel on E
+    elif name in _ROW:
+        try_shard(-2 if len(shape) >= 2 else -1)
+    elif name in _COL:
+        try_shard(-1)
+    return spec
+
+
+def _add_fsdp(spec: list, shape, dp: Tuple[str, ...], dp_size: int) -> list:
+    """Shard the largest still-replicated dim over the data axes (ZeRO/fsdp)."""
+    best, best_size = None, 0
+    for i, (s, sp) in enumerate(zip(shape, spec)):
+        if sp is None and s % dp_size == 0 and s > best_size and s >= dp_size:
+            best, best_size = i, s
+    if best is not None:
+        spec = list(spec)
+        spec[best] = dp[0] if len(dp) == 1 else dp
+    return spec
+
+
+def param_specs(params_shape, mesh: Mesh, layout: str):
+    """Pytree of PartitionSpec matching ``params_shape`` (eval_shape output)."""
+    model_size = mesh.shape["model"]
+    dp = dp_axes_of(mesh)
+    dp_size = _axes_size(mesh, dp)
+    w_ax = worker_axis_of(mesh)
+    w_fsdp = worker_fsdp_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if layout == "replicated":
+            return P()
+        if layout == "worker":
+            inner = _base_spec(ps, shape[1:], model_size)
+            if w_fsdp:  # hierarchical: FSDP the replica inside the group
+                inner = _add_fsdp(inner, shape[1:], w_fsdp, _axes_size(mesh, w_fsdp))
+            return P(w_ax, *inner)
+        name = ps.split("/")[-1]
+        if layout == "tp_attn_rep" and name in ("wq", "wk", "wv", "wo"):
+            # batch-parallel attention: replicate attention projections so the
+            # (head-count % model_size != 0) reshape never gathers activations
+            return P(*([None] * len(shape)))
+        spec = _base_spec(ps, shape, model_size)
+        if layout not in ("tp", "tp_attn_rep"):  # "tp*": no ZeRO-3 gathers
+            spec = _add_fsdp(spec, shape, dp, dp_size)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, batch: int):
+    """KV/SSM cache specs: batch dim over the data axes when divisible,
+    else the longest divisible dim (sequence, for long_500k B=1)."""
+    dp = dp_axes_of(mesh)
+    dp_size = _axes_size(mesh, dp)
+    ax = dp[0] if len(dp) == 1 else dp
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        bdim = None
+        for i, s in enumerate(shape[:2]):
+            if s == batch:
+                bdim = i
+                break
+        if bdim is not None and batch % dp_size == 0 and batch >= dp_size:
+            spec[bdim] = ax
+        else:
+            cand = [(s, i) for i, s in enumerate(shape) if s % dp_size == 0 and s >= dp_size]
+            if cand:
+                _, i = max(cand)
+                spec[i] = ax
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def train_batch_spec(batch_shape, mesh: Mesh):
+    """Training batch [W, B_local, ...]: W over the worker axes; in the
+    hierarchical mesh the within-worker batch also shards over 'data'."""
+    ax = worker_axis_of(mesh)
+    w_fsdp = worker_fsdp_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * (len(leaf.shape) - 1)
+        if w_fsdp and len(leaf.shape) >= 2 and leaf.shape[1] % _axes_size(mesh, w_fsdp) == 0:
+            spec[0] = w_fsdp[0]
+        return P(ax, *spec)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def serve_batch_spec(batch_shape, mesh: Mesh, batch: int):
+    dp = dp_axes_of(mesh)
+    dp_size = _axes_size(mesh, dp)
+    ax = dp[0] if len(dp) == 1 else dp
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] == batch and batch % dp_size == 0 and batch >= dp_size:
+            spec[0] = ax
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def scalar_specs(tree_shape):
+    return jax.tree.map(lambda _: P(), tree_shape)

@@ -1,0 +1,164 @@
+"""Per-(architecture × input-shape × mesh) lowering specs.
+
+``build(arch_id, shape_id, mesh)`` returns the step function, its abstract
+arguments (ShapeDtypeStructs — no allocation), and matching in_shardings.
+
+Input shapes (assigned):
+    train_4k      seq=4096    global_batch=256   -> train_step (MARINA-P round)
+    prefill_32k   seq=32768   global_batch=32    -> prefill_step (forward)
+    decode_32k    seq=32768   global_batch=128   -> serve_step (1 token + cache)
+    long_500k     seq=524288  global_batch=1     -> serve_step; sub-quadratic
+                  natively (rwkv6, gemma3) or via the sliding-window variant
+                  (window = cfg.long_context_window) for full-attention archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data import batch_specs as data_batch_specs
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import make_optimizer
+from repro.optim.schedules import cosine_warmup
+from repro.train import TrainerConfig, init_state, make_downlink, make_train_step
+from . import sharding as sh
+from .mesh import n_workers as mesh_n_workers
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq=524288, global_batch=1),
+}
+
+
+def long_ctx_window(cfg: ModelConfig) -> Optional[int]:
+    """Sliding-window override for 500k decode (DESIGN.md §4)."""
+    if not cfg.subquadratic:
+        return cfg.long_context_window  # dense/moe/vlm/audio: swa variant
+    if cfg.family == "hybrid":
+        return cfg.long_context_window  # zamba2: window its shared attn slots
+    return None  # rwkv6 / gemma3: native
+
+
+def _bf16_params_shape(cfg: ModelConfig):
+    shape = jax.eval_shape(lambda k: lm.lm_init(cfg, k), jax.random.PRNGKey(0))
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16), shape)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class Built:
+    fn: Any
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    meta: dict
+
+
+def build(arch_id: str, shape_id: str, mesh: Mesh, *, downlink_spec: str = "marina:perm",
+          remat: bool = True, attn_chunk: int = 512, serve_layout: str = "serve",
+          remat_policy=None, train_act_model_sharded: bool = False) -> Built:
+    cfg = configs.get(arch_id)
+    info = SHAPES[shape_id]
+    W = mesh_n_workers(mesh)
+
+    if info["kind"] == "train":
+        assert info["global_batch"] % W == 0
+        bpw = info["global_batch"] // W
+        act = None
+        if train_act_model_sharded and bpw % mesh.shape["model"] == 0:
+            act = P("model", None, None)  # within-worker batch over model axis
+        tcfg = TrainerConfig(
+            n_workers=W, remat=remat, attn_chunk=attn_chunk, weight_dtype=jnp.bfloat16,
+            remat_policy=remat_policy, act_spec=act,
+        )
+        downlink = make_downlink(downlink_spec, W)
+        optimizer = make_optimizer("adamw")
+        lr_fn = cosine_warmup(3e-4, 200, 20000)
+        step_fn = make_train_step(cfg, tcfg, downlink, optimizer, lr_fn)
+        state_shape = jax.eval_shape(
+            lambda k: init_state(cfg, tcfg, downlink, optimizer, k), jax.random.PRNGKey(0)
+        )
+        batch_shape = data_batch_specs(cfg, W, bpw, info["seq"])
+        key_shape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+        # build state specs by routing on the top-level key
+        server_specs = sh.param_specs(state_shape["server"], mesh, "server")
+        opt_specs = sh.param_specs(state_shape["opt"], mesh, "server")
+        state_specs = {
+            "server": server_specs,
+            "opt": opt_specs,
+            "step": P(),
+            "bits_per_worker": P(),
+        }
+        if "workers" in state_shape:
+            state_specs["workers"] = sh.param_specs(state_shape["workers"], mesh, "worker")
+        batch_sp = sh.train_batch_spec(batch_shape, mesh)
+        args = (state_shape, batch_shape, key_shape)
+        in_sh = (_ns(mesh, state_specs), _ns(mesh, batch_sp), NamedSharding(mesh, P()))
+        return Built(step_fn, args, in_sh, dict(cfg=cfg, W=W, bpw=bpw, **info))
+
+    if info["kind"] == "prefill":
+        B, S = info["global_batch"], info["seq"]
+        params_shape = _bf16_params_shape(cfg)
+        dp = sh.dp_axes_of(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        # anchor batch-parallel activations (requires use_mesh at lower time)
+        act = P(dp[0] if len(dp) == 1 else dp, None, None) if B % dp_size == 0 else None
+
+        def prefill_step(params, batch):
+            return lm.forward(cfg, params, batch, chunk=attn_chunk, remat=remat,
+                              act_spec=act)
+
+        if cfg.num_codebooks:
+            batch_shape = {"tokens": jax.ShapeDtypeStruct((B, cfg.num_codebooks, S), jnp.int32)}
+        elif cfg.num_patches:
+            batch_shape = {
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), jnp.int32),
+                "patches": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), jnp.bfloat16),
+            }
+        else:
+            batch_shape = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        p_specs = sh.param_specs(params_shape, mesh, serve_layout)
+        b_specs = sh.serve_batch_spec(batch_shape, mesh, B)
+        args = (params_shape, batch_shape)
+        in_sh = (_ns(mesh, p_specs), _ns(mesh, b_specs))
+        return Built(prefill_step, args, in_sh, dict(cfg=cfg, **info))
+
+    # ---- decode ---------------------------------------------------------------
+    B, S = info["global_batch"], info["seq"]
+    window = long_ctx_window(cfg) if shape_id == "long_500k" else None
+    params_shape = _bf16_params_shape(cfg)
+    caches_shape = jax.eval_shape(
+        lambda: lm.cache_init(cfg, B, S, window_override=window)
+    )
+
+    def serve_step(params, caches, token, pos):
+        return lm.decode_step(cfg, params, caches, token, pos, window_override=window)
+
+    if cfg.num_codebooks:
+        token_shape = jax.ShapeDtypeStruct((B, cfg.num_codebooks, 1), jnp.int32)
+    else:
+        token_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    p_specs = sh.param_specs(params_shape, mesh, serve_layout)
+    c_specs = sh.cache_specs(caches_shape, mesh, B)
+    t_specs = sh.serve_batch_spec(token_shape, mesh, B)
+    args = (params_shape, caches_shape, token_shape, pos_shape)
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, c_specs), _ns(mesh, t_specs), NamedSharding(mesh, P()))
+    return Built(serve_step, args, in_sh, dict(cfg=cfg, window=window, **info))

@@ -1,0 +1,2 @@
+"""Model substrate: configs, layers, SSM/MoE blocks, transformer stack, LM."""
+from .config import MambaConfig, MLAConfig, ModelConfig, MoEConfig, RWKVConfig  # noqa: F401

@@ -1,0 +1,410 @@
+"""Core NN layers: RMSNorm, RoPE, MLPs, GQA/MQA attention, MLA.
+
+Conventions
+-----------
+* params are plain dict pytrees; every layer provides ``init(cfg, key)``,
+  ``apply(params, x, ...)`` and (for attention) a ``decode`` path.
+* activations are bf16, softmax statistics and norms fp32.
+* projection weights are stored 2-D ``[d_in, d_out]`` with flattened
+  head dims so tensor-parallel sharding never depends on head-count
+  divisibility (DESIGN.md §5).
+* attention over long sequences uses an online-softmax scan over KV chunks
+  (XLA-native flash equivalent) so the memory roofline is honest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig, ModelConfig
+
+Array = jax.Array
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32)[..., None, :] * freqs  # [...,S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg_like, key, d_model: int, d_ff: int, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": _dense_init(k2, d_ff, d_model)}
+    if kind in ("swiglu", "geglu"):
+        p["w_in"] = _dense_init(k1, d_model, d_ff)
+        p["w_gate"] = _dense_init(k3, d_model, d_ff)
+    else:  # relu2 | gelu
+        p["w_in"] = _dense_init(k1, d_model, d_ff)
+    return p
+
+
+def mlp_apply(params, x, kind: str):
+    h = x @ params["w_in"].astype(x.dtype)
+    if kind == "swiglu":
+        g = x @ params["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif kind == "geglu":
+        g = x @ params["w_gate"].astype(x.dtype)
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * h
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    return h @ params["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def windowed_attention(q: Array, k: Array, v: Array, *, window: int, chunk: int = 512) -> Array:
+    """Sliding-window self-attention that only touches in-window KV chunks.
+
+    §Perf optimization (EXPERIMENTS.md): the naive chunked path scans ALL
+    S/chunk KV chunks and masks, costing O(S^2) flops even for a 512-token
+    window. Here each query chunk attends to exactly the
+    ceil((window-1)/chunk)+1 KV chunks that can intersect its window, so
+    flops drop to O(S * (window + chunk)). Exact — no approximation.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[-1]
+    G = H // KV
+    scale = hd**-0.5
+    nq = -(-S // chunk)
+    pad = nq * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    w_chunks = -(-(window - 1) // chunk) + 1
+    L = w_chunks * chunk
+    zpad = (w_chunks - 1) * chunk
+    k_ext = jnp.pad(k, ((0, 0), (zpad, 0), (0, 0), (0, 0)))
+    v_ext = jnp.pad(v, ((0, 0), (zpad, 0), (0, 0), (0, 0)))
+    qg = q.reshape(B, nq, chunk, KV, G, hd)
+
+    def body(_, i):
+        qb = jax.lax.dynamic_index_in_dim(qg, i, axis=1, keepdims=False)
+        kb = jax.lax.dynamic_slice_in_dim(k_ext, i * chunk, L, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_ext, i * chunk, L, axis=1)
+        q_pos = i * chunk + jnp.arange(chunk)
+        k_pos = (i - w_chunks + 1) * chunk + jnp.arange(L)
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qb, kb, preferred_element_type=jnp.float32) * scale
+        mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] >= 0)
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= k_pos[None, :] < S
+        mask &= q_pos[:, None] < S
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m)
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        out = jnp.einsum("bqkgc,bckh->bqkgh", p, vb.astype(jnp.float32))
+        out = out / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(body, None, jnp.arange(nq))  # [nq, B, chunk, KV, G, hd_v]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * chunk, H, hd_v)
+    return out[:, :S]
+
+
+def chunked_attention(
+    q: Array,  # [B, Sq, H, hd]
+    k: Array,  # [B, Sk, KV, hd]
+    v: Array,  # [B, Sk, KV, hd]
+    *,
+    q_offset: int | Array = 0,
+    window: Optional[int] = None,
+    chunk: int = 512,
+) -> Array:
+    """Causal (optionally sliding-window) attention via scan over KV chunks.
+
+    Memory per step is O(B * Sq * chunk) — the XLA-native flash pattern.
+    Self-attention with a window shorter than the sequence dispatches to
+    :func:`windowed_attention` (in-window chunks only — §Perf).
+    """
+    if (
+        window is not None
+        and q.shape[1] == k.shape[1]
+        and isinstance(q_offset, int)
+        and q_offset == 0
+        and window < k.shape[1]
+    ):
+        return windowed_attention(q, k, v, window=window, chunk=min(chunk, max(window, 128)))
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]  # may differ from hd (MLA)
+    G = H // KV
+    scale = hd**-0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KV, hd_v).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kci, vci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqkgh,bckh->bqkgc", qg, kci, preferred_element_type=jnp.float32
+        ) * scale
+        mask = q_pos[:, None] >= k_pos[None, :]  # causal
+        mask &= k_pos[None, :] < Sk  # padding
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p, vci.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nchunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,  # [B, 1, H, hd]
+    k_cache: Array,  # [B, S, KV, hd]
+    v_cache: Array,  # [B, S, KV, hd]
+    valid_mask: Array,  # [B, S] bool (or [S])
+) -> Array:
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * hd**-0.5
+    vm = valid_mask if valid_mask.ndim == 2 else valid_mask[None, :]
+    s = jnp.where(vm[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attention_init(cfg: ModelConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(k1, cfg.d_model, cfg.q_dim),
+        "wk": _dense_init(k2, cfg.d_model, cfg.kv_dim),
+        "wv": _dense_init(k3, cfg.d_model, cfg.kv_dim),
+        "wo": _dense_init(k4, cfg.q_dim, cfg.d_model, scale=cfg.q_dim**-0.5),
+    }
+
+
+def _qkv(cfg: ModelConfig, params, x, positions):
+    B, S, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(cfg: ModelConfig, params, x, *, window=None, chunk=512):
+    """Training / prefill self-attention. x: [B, S, D]."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(cfg, params, x, positions)
+    out = chunked_attention(q, k, v, window=window, chunk=chunk)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(cfg: ModelConfig, params, x, cache, pos, *, window=None):
+    """One-token decode. x: [B,1,D]; cache: {k,v: [B, L, KV, hd]} ring buffer
+    of length L (= window for local layers, full seq for global)."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos[None, None] if jnp.ndim(pos) else jnp.full((B, 1), pos), (B, 1))
+    q, k, v = _qkv(cfg, params, x, positions)
+    slot = pos % L
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # slot j holds absolute position: j if j <= slot else j - L (previous wrap)
+    idx = jnp.arange(L)
+    abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot + idx - L)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        valid &= pos - abs_pos < window
+    out = decode_attention(q, k_cache, v_cache, valid)
+    y = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_cache_init(cfg: ModelConfig, batch: int, length: int, dtype=COMPUTE_DTYPE):
+    shape = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ModelConfig, key):
+    m: MLAConfig = cfg.mla
+    H = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qd = H * (m.nope_head_dim + m.rope_head_dim)
+    return {
+        "wq": _dense_init(ks[0], cfg.d_model, qd),
+        "w_dkv": _dense_init(ks[1], cfg.d_model, m.kv_lora_rank),
+        "w_krope": _dense_init(ks[2], cfg.d_model, m.rope_head_dim),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "w_uk": _dense_init(ks[3], m.kv_lora_rank, H * m.nope_head_dim),
+        "w_uv": _dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim),
+        "wo": _dense_init(ks[5], H * m.v_head_dim, cfg.d_model),
+    }
+
+
+def _mla_q(cfg, params, x, positions):
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, params, x, positions):
+    m = cfg.mla
+    c = rmsnorm(params["kv_norm"], x @ params["w_dkv"].astype(x.dtype), cfg.rms_eps)
+    k_rope = (x @ params["w_krope"].astype(x.dtype))[:, :, None, :]  # [B,S,1,rd]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_apply(cfg: ModelConfig, params, x, *, window=None, chunk=512):
+    """Prefill/train MLA: reconstruct per-head K/V from the latent, then run
+    standard chunked attention with a concatenated [nope|rope] key."""
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)
+    c, k_rope = _mla_latent(cfg, params, x, positions)
+    k_nope = (c @ params["w_uk"].astype(x.dtype)).reshape(B, S, H, m.nope_head_dim)
+    v = (c @ params["w_uv"].astype(x.dtype)).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.rope_head_dim))],
+        axis=-1,
+    )
+    out = chunked_attention(q, k, v, window=window, chunk=chunk)
+    return out.reshape(B, S, H * m.v_head_dim) @ params["wo"].astype(x.dtype)
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache, pos, *, window=None):
+    """Absorbed-matmul decode (the MLA trick): attention runs directly in the
+    kv_lora latent space — the cache stores only [c | k_rope] per token, and
+    W_uk / W_uv are absorbed into the query / output projections."""
+    m = cfg.mla
+    H = cfg.num_heads
+    B = x.shape[0]
+    L = cache["c"].shape[1]
+    positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (B, 1))
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)  # [B,1,H,*]
+    c, k_rope = _mla_latent(cfg, params, x, positions)  # [B,1,r], [B,1,rd]
+    slot = pos % L
+    c_cache = jax.lax.dynamic_update_slice(cache["c"], c.astype(cache["c"].dtype), (0, slot, 0))
+    kr_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+    # absorb W_uk into q:  q_eff[h] = q_nope[h] @ W_uk[h]^T  -> latent dim
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.nope_head_dim)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk.astype(x.dtype))  # [B,H,r]
+    s = jnp.einsum("bhr,bsr->bhs", q_eff, c_cache, preferred_element_type=jnp.float32)
+    s += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], kr_cache, preferred_element_type=jnp.float32)
+    s *= (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    idx = jnp.arange(L)
+    abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot + idx - L)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        valid &= pos - abs_pos < window
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", p, c_cache.astype(jnp.float32))  # [B,H,r]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", lat.astype(x.dtype), w_uv.astype(x.dtype))
+    y = out.reshape(B, 1, H * m.v_head_dim) @ params["wo"].astype(x.dtype)
+    return y, {"c": c_cache, "k_rope": kr_cache}
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, length: int, dtype=COMPUTE_DTYPE):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, length, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, length, m.rope_head_dim), dtype),
+    }

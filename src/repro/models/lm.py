@@ -1,0 +1,183 @@
+"""Top-level language model: embeddings, stack, heads, loss, decode.
+
+Handles the three input modalities of the assigned pool:
+* text          tokens [B, S]
+* audio (musicgen)   EnCodec codebook tokens [B, K, S]; K embeddings summed,
+                     K output heads (the codec itself is a stub per DESIGN §4)
+* vlm (pixtral)      stubbed ViT patch embeddings [B, P, D] prepended to text
+                     token embeddings; loss over text positions only
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+from .config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def lm_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    if cfg.num_codebooks:
+        params["embed"] = (
+            jax.random.normal(k_embed, (cfg.num_codebooks, cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        )
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(k_out, (cfg.num_codebooks, cfg.d_model, cfg.vocab_size), jnp.float32)
+                * cfg.d_model**-0.5
+            )
+    else:
+        params["embed"] = (
+            jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+        )
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(k_out, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                * cfg.d_model**-0.5
+            )
+    params["stack"] = T.stack_init(cfg, k_stack)
+    params["ln_f"] = L.rmsnorm_init(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head helpers
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens: Array) -> Array:
+    emb = params["embed"].astype(L.COMPUTE_DTYPE)
+    if cfg.num_codebooks:
+        # tokens: [B, K, S] -> sum_k E_k[tok_k]
+        parts = [emb[k][tokens[:, k]] for k in range(cfg.num_codebooks)]
+        return sum(parts)
+    return emb[tokens]
+
+
+def logits_from_hidden(cfg: ModelConfig, params, h: Array) -> Array:
+    if cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            w = params["embed"].astype(h.dtype)  # [K, V, D]
+            return jnp.einsum("bsd,kvd->bksv", h, w)
+        return h @ params["embed"].astype(h.dtype).T
+    if cfg.num_codebooks:
+        w = params["unembed"].astype(h.dtype)  # [K, D, V]
+        return jnp.einsum("bsd,kdv->bksv", h, w)
+    return h @ params["unembed"].astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Array],
+    *,
+    window_override: Optional[int] = None,
+    chunk: int = 512,
+    remat: bool = True,
+    act_spec=None,
+    remat_policy=None,
+) -> Array:
+    """Returns logits: [B,S,V] (text/vlm over full seq) or [B,K,S,V].
+
+    ``act_spec``: optional PartitionSpec pinned onto the [B,S,D] hidden
+    states after embedding and after every block segment (requires an
+    ambient mesh, e.g. ``jax.sharding.use_mesh``). This anchors
+    batch-parallel activations so GSPMD never falls back to token
+    replication (§Perf, EXPERIMENTS.md).
+    """
+    constrain = (
+        (lambda t: jax.lax.with_sharding_constraint(t, act_spec))
+        if act_spec is not None
+        else (lambda t: t)
+    )
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.num_patches:
+        patches = batch["patches"].astype(x.dtype)  # [B, P, D]
+        x = jnp.concatenate([patches, x], axis=1)
+    x = constrain(x)
+    x = T.stack_apply(cfg, params["stack"], x, window_override=window_override,
+                      chunk=chunk, remat=remat, constrain=constrain,
+                      remat_policy=remat_policy)
+    x = L.rmsnorm(params["ln_f"], x, cfg.rms_eps)
+    if cfg.num_patches:
+        x = x[:, cfg.num_patches :]  # logits over text region only
+    return logits_from_hidden(cfg, params, x)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean next-token CE. logits [..., S, V] (fp32 statistics), labels [..., S]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, **fwd_kw) -> Array:
+    logits = forward(cfg, params, batch, **fwd_kw)
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        return cross_entropy(logits[..., :-1, :], tokens[..., 1:])
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step body)
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg: ModelConfig, batch: int, cache_len: int, *, window_override=None, dtype=L.COMPUTE_DTYPE):
+    return T.stack_cache_init(cfg, batch, cache_len, window_override=window_override, dtype=dtype)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    caches,
+    token: Array,  # [B,1] or [B,K,1]
+    pos: Array,  # scalar int32
+    *,
+    window_override: Optional[int] = None,
+):
+    """One-token decode: returns (logits [B,V] or [B,K,V], new caches)."""
+    x = embed_tokens(cfg, params, token)  # [B,1,D]
+    x, new_caches = T.stack_decode(cfg, params["stack"], caches, x, pos, window_override=window_override)
+    x = L.rmsnorm(params["ln_f"], x, cfg.rms_eps)
+    logits = logits_from_hidden(cfg, params, x)
+    if cfg.num_codebooks:
+        return logits[:, :, 0, :], new_caches  # [B,K,V]
+    return logits[:, 0, :], new_caches
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(lambda k: lm_init(cfg, k), jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only and cfg.moe is not None:
+            keys = "/".join(str(p) for p in path)
+            if any(w in keys for w in ("w_in", "w_gate", "w_out")) and "moe" in keys and "shared" not in keys:
+                n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total

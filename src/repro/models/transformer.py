@@ -1,0 +1,318 @@
+"""Block composition and layer stacking.
+
+A model is a sequence of blocks, one per entry of ``cfg.block_pattern``:
+
+  attn / attn_local   pre-norm attention (+ window) + MLP
+  moe                 pre-norm attention + MoE feed-forward
+  mamba               Mamba2 (SSD) block
+  rwkv                RWKV6 time-mix + channel-mix block
+  shared              weight-tied attention block (zamba2); all ``shared``
+                      slots use one parameter set but separate caches.
+
+Stacking plan (compile-time): a periodic pattern scans over stacked
+super-block parameters (small HLO => fast 256/512-way SPMD compiles); long
+uniform runs are scanned likewise; everything else unrolls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stacking plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str                      # "scan" | "unroll"
+    block_kinds: Tuple[str, ...]   # super-block pattern (scan) or single kind
+    count: int                     # scan repetitions (1 for unroll)
+    first_layer: int               # absolute index of first layer in segment
+
+
+def plan_stack(pattern: Tuple[str, ...]) -> List[Segment]:
+    """Cover the pattern with scan segments wherever a period repeats >= 2x.
+
+    Greedy left-to-right: at each position try periods 1..8 and take the one
+    covering the most layers as a scanned super-block; otherwise unroll one
+    layer. ``shared`` blocks may appear inside scanned super-blocks — their
+    (weight-tied) params are closure constants, not scanned.
+    """
+    n = len(pattern)
+    segs: List[Segment] = []
+    i = 0
+    while i < n:
+        best = None  # (covered, p, reps)
+        for p in range(1, 9):
+            reps = 1
+            while i + (reps + 1) * p <= n and pattern[i + reps * p : i + (reps + 1) * p] == pattern[i : i + p]:
+                reps += 1
+            covered = reps * p
+            if reps >= 2 and covered >= 4 and (best is None or covered > best[0]):
+                best = (covered, p, reps)
+        if best:
+            covered, p, reps = best
+            segs.append(Segment("scan", tuple(pattern[i : i + p]), reps, i))
+            i += covered
+        else:
+            segs.append(Segment("unroll", (pattern[i],), 1, i))
+            i += 1
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Single block init / apply / decode
+# ---------------------------------------------------------------------------
+
+
+def block_init(cfg: ModelConfig, kind: str, key):
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local"):
+        attn = L.mla_init(cfg, k2) if cfg.mla else L.attention_init(cfg, k2)
+        return {
+            "ln1": L.rmsnorm_init(D),
+            "attn": attn,
+            "ln2": L.rmsnorm_init(D),
+            "mlp": L.mlp_init(cfg, k3, D, cfg.d_ff, cfg.mlp_kind),
+        }
+    if kind == "moe":
+        attn = L.mla_init(cfg, k2) if cfg.mla else L.attention_init(cfg, k2)
+        return {
+            "ln1": L.rmsnorm_init(D),
+            "attn": attn,
+            "ln2": L.rmsnorm_init(D),
+            "moe": MOE.moe_init(cfg, k3),
+        }
+    if kind == "mamba":
+        return {"ln": L.rmsnorm_init(D), "mamba": SSM.mamba_init(cfg, k2)}
+    if kind == "rwkv":
+        return {"ln1": L.rmsnorm_init(D), "ln2": L.rmsnorm_init(D), "rwkv": SSM.rwkv_init(cfg, k2)}
+    if kind == "shared":
+        return {}  # weight-tied; params live in model["shared_blk"]
+    raise ValueError(kind)
+
+
+def shared_block_init(cfg: ModelConfig, key):
+    """zamba2's weight-tied attention block."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(cfg, k1),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(cfg, k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def _attn_window(cfg: ModelConfig, kind: str, window_override) -> Optional[int]:
+    if window_override is not None and window_override > 0:
+        if kind != "attn" or window_override < 0:
+            pass
+    if kind == "attn_local":
+        return cfg.sliding_window
+    # window_override: serving-time SWA variant for dense archs (long_500k)
+    return window_override
+
+
+def block_apply(cfg, kind, params, shared_params, x, *, window_override=None, chunk=512):
+    """Training / prefill forward for one block. x: [B,S,D]."""
+    if kind == "shared":
+        params = shared_params
+        kind = "attn"
+    if kind in ("attn", "attn_local", "moe"):
+        w = _attn_window(cfg, kind, window_override)
+        h = L.rmsnorm(params["ln1"], x, cfg.rms_eps)
+        if cfg.mla:
+            h = L.mla_apply(cfg, params["attn"], h, window=w, chunk=chunk)
+        else:
+            h = L.attention_apply(cfg, params["attn"], h, window=w, chunk=chunk)
+        x = x + h
+        h = L.rmsnorm(params["ln2"], x, cfg.rms_eps)
+        if kind == "moe":
+            h = MOE.moe_apply(cfg, params["moe"], h)
+        else:
+            h = L.mlp_apply(params["mlp"], h, cfg.mlp_kind)
+        return x + h
+    if kind == "mamba":
+        return x + SSM.mamba_apply(cfg, params["mamba"], L.rmsnorm(params["ln"], x, cfg.rms_eps))
+    if kind == "rwkv":
+        h = L.rmsnorm(params["ln1"], x, cfg.rms_eps)
+        x = x + SSM.rwkv_timemix_apply(cfg, params["rwkv"], h)
+        h = L.rmsnorm(params["ln2"], x, cfg.rms_eps)
+        return x + SSM.rwkv_chanmix_apply(cfg, params["rwkv"], h)
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg, kind, batch, cache_len, *, window_override=None, dtype=L.COMPUTE_DTYPE):
+    if kind == "shared":
+        kind = "attn"
+    if kind in ("attn", "attn_local", "moe"):
+        w = _attn_window(cfg, kind, window_override)
+        length = min(cache_len, w) if w else cache_len
+        if cfg.mla:
+            return L.mla_cache_init(cfg, batch, length, dtype)
+        return L.attention_cache_init(cfg, batch, length, dtype)
+    if kind == "mamba":
+        return SSM.mamba_cache_init(cfg, batch, dtype)
+    if kind == "rwkv":
+        return SSM.rwkv_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(cfg, kind, params, shared_params, x, cache, pos, *, window_override=None):
+    if kind == "shared":
+        params = shared_params
+        kind = "attn"
+    if kind in ("attn", "attn_local", "moe"):
+        w = _attn_window(cfg, kind, window_override)
+        h = L.rmsnorm(params["ln1"], x, cfg.rms_eps)
+        if cfg.mla:
+            h, cache = L.mla_decode(cfg, params["attn"], h, cache, pos, window=w)
+        else:
+            h, cache = L.attention_decode(cfg, params["attn"], h, cache, pos, window=w)
+        x = x + h
+        h = L.rmsnorm(params["ln2"], x, cfg.rms_eps)
+        if kind == "moe":
+            h = MOE.moe_apply(cfg, params["moe"], h)
+        else:
+            h = L.mlp_apply(params["mlp"], h, cfg.mlp_kind)
+        return x + h, cache
+    if kind == "mamba":
+        h, new = SSM.mamba_decode(cfg, params["mamba"], L.rmsnorm(params["ln"], x, cfg.rms_eps), cache, pos)
+        return x + h, new
+    if kind == "rwkv":
+        h = L.rmsnorm(params["ln1"], x, cfg.rms_eps)
+        tm_cache = {"state": cache["state"], "x_last": cache["x_last"]}
+        hh, tm_new = SSM.rwkv_timemix_decode(cfg, params["rwkv"], h, tm_cache, pos)
+        x = x + hh
+        h2 = L.rmsnorm(params["ln2"], x, cfg.rms_eps)
+        cm = SSM.rwkv_chanmix_apply(cfg, params["rwkv"], h2, x_last=cache["cm_x_last"].astype(h2.dtype))
+        x = x + cm
+        new = {"state": tm_new["state"], "x_last": tm_new["x_last"],
+               "cm_x_last": h2[:, 0].astype(cache["cm_x_last"].dtype)}
+        return x, new
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack init / apply / decode
+# ---------------------------------------------------------------------------
+
+
+def stack_init(cfg: ModelConfig, key):
+    segs = plan_stack(cfg.block_pattern)
+    params: dict = {"segments": []}
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    if "shared" in cfg.block_pattern:
+        params["shared_blk"] = shared_block_init(cfg, keys[-1])
+    for seg in segs:
+        if seg.kind == "unroll":
+            params["segments"].append(block_init(cfg, seg.block_kinds[0], keys[seg.first_layer]))
+        else:
+            per_rep = []
+            p = len(seg.block_kinds)
+            for rep in range(seg.count):
+                blk = {}
+                for j, bk in enumerate(seg.block_kinds):
+                    blk[f"b{j}"] = block_init(cfg, bk, keys[seg.first_layer + rep * p + j])
+                per_rep.append(blk)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+            params["segments"].append(stacked)
+    return params
+
+
+_REMAT_POLICIES = {
+    None: None,
+    "full": None,  # save nothing, recompute everything
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _make_checkpoint(remat, remat_policy):
+    if not remat:
+        return lambda f: f
+    pol_name = _REMAT_POLICIES.get(remat_policy, remat_policy)
+    if pol_name is None:
+        return jax.checkpoint
+    policy = getattr(jax.checkpoint_policies, pol_name)
+    return lambda f: jax.checkpoint(f, policy=policy)
+
+
+def stack_apply(cfg: ModelConfig, params, x, *, window_override=None, chunk=512, remat=True,
+                constrain=None, remat_policy=None):
+    segs = plan_stack(cfg.block_pattern)
+    shared = params.get("shared_blk")
+    constrain = constrain or (lambda t: t)
+    ckpt = _make_checkpoint(remat, remat_policy)
+    for seg, seg_params in zip(segs, params["segments"]):
+        if seg.kind == "unroll":
+            fn = ckpt(lambda p, h, bk=seg.block_kinds[0]: constrain(block_apply(
+                cfg, bk, p, shared, h, window_override=window_override, chunk=chunk
+            )))
+            x = fn(seg_params, x)
+        else:
+            def body(h, rep_params, kinds=seg.block_kinds):
+                for j, bk in enumerate(kinds):
+                    h = constrain(block_apply(
+                        cfg, bk, rep_params[f"b{j}"], shared, h,
+                        window_override=window_override, chunk=chunk,
+                    ))
+                return h, None
+
+            x, _ = jax.lax.scan(ckpt(body), x, seg_params)
+    return x
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, cache_len: int, *, window_override=None, dtype=L.COMPUTE_DTYPE):
+    """Per-layer caches, grouped by segment (stacked for scan segments)."""
+    segs = plan_stack(cfg.block_pattern)
+    caches = []
+    for seg in segs:
+        if seg.kind == "unroll":
+            caches.append(block_cache_init(cfg, seg.block_kinds[0], batch, cache_len,
+                                           window_override=window_override, dtype=dtype))
+        else:
+            one = {
+                f"b{j}": block_cache_init(cfg, bk, batch, cache_len,
+                                          window_override=window_override, dtype=dtype)
+                for j, bk in enumerate(seg.block_kinds)
+            }
+            caches.append(jax.tree.map(lambda t: jnp.broadcast_to(t, (seg.count,) + t.shape), one))
+    return caches
+
+
+def stack_decode(cfg: ModelConfig, params, caches, x, pos, *, window_override=None):
+    segs = plan_stack(cfg.block_pattern)
+    shared = params.get("shared_blk")
+    new_caches = []
+    for seg, seg_params, seg_cache in zip(segs, params["segments"], caches):
+        if seg.kind == "unroll":
+            x, nc = block_decode(cfg, seg.block_kinds[0], seg_params, shared, x, seg_cache, pos,
+                                 window_override=window_override)
+            new_caches.append(nc)
+        else:
+            def body(h, rep, kinds=seg.block_kinds):
+                rep_params, rep_cache = rep
+                new_rep_cache = {}
+                for j, bk in enumerate(kinds):
+                    h, new_rep_cache[f"b{j}"] = block_decode(
+                        cfg, bk, rep_params[f"b{j}"], shared, h, rep_cache[f"b{j}"], pos,
+                        window_override=window_override,
+                    )
+                return h, new_rep_cache
+
+            x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches.append(nc)
+    return x, new_caches

@@ -1,0 +1,96 @@
+"""Optimizers (built here — no optax in the environment).
+
+Pure-functional: ``init(params) -> state``, ``update(grads, state, params,
+lr) -> (new_params, new_state)``. The server-side master update of the
+MARINA-P/EF21-P trainer runs these on fp32 master weights (ZeRO-1-style fsdp
+sharding of the moments — see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(lambda t: jnp.zeros_like(t, dtype=jnp.float32), tree)
+
+
+# -- SGD (+ momentum) ---------------------------------------------------------
+
+
+def sgd_init(params, momentum: float = 0.0):
+    return {"mu": _tree_zeros_like(params)} if momentum else {}
+
+
+def sgd_update(grads, state, params, lr, *, momentum: float = 0.0, weight_decay: float = 0.0):
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        step_dir = mu
+        new_state = {"mu": mu}
+    else:
+        step_dir = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_state = {}
+    new_params = jax.tree.map(
+        lambda p, d: (p - lr * (d + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+        params,
+        step_dir,
+    )
+    return new_params, new_state
+
+
+# -- AdamW --------------------------------------------------------------------
+
+
+def adamw_init(params):
+    return {
+        "m": _tree_zeros_like(params),
+        "v": _tree_zeros_like(params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0
+):
+    count = state["count"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1**count.astype(jnp.float32)
+    bc2 = 1 - b2**count.astype(jnp.float32)
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return (p - lr * (step + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}
+
+
+# -- registry -----------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+    name: str
+
+
+def make_optimizer(spec: str, **kw) -> Optimizer:
+    """``adamw``, ``sgd``, ``sgd:0.9`` (momentum)."""
+    parts = spec.split(":")
+    if parts[0] == "adamw":
+        return Optimizer(
+            init=adamw_init,
+            update=lambda g, s, p, lr: adamw_update(g, s, p, lr, **kw),
+            name="adamw",
+        )
+    if parts[0] == "sgd":
+        mom = float(parts[1]) if len(parts) > 1 else kw.pop("momentum", 0.0)
+        return Optimizer(
+            init=lambda p: sgd_init(p, mom),
+            update=lambda g, s, p, lr: sgd_update(g, s, p, lr, momentum=mom, **kw),
+            name="sgd",
+        )
+    raise ValueError(spec)

@@ -1,0 +1,39 @@
+"""Learning-rate schedules (paper §1: StepLR-style substrate) ."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def inv_sqrt(gamma0: float):
+    """The paper's decreasing schedule (15)/(25) as an LR schedule."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return gamma0 / jnp.sqrt(s + 1.0)
+
+    return fn
+
+
+def make_schedule(spec: str, **kw):
+    parts = spec.split(":")
+    if parts[0] == "constant":
+        return constant_lr(float(parts[1]))
+    if parts[0] == "cosine":
+        return cosine_warmup(float(parts[1]), int(kw.get("warmup", 100)), int(kw.get("total", 10000)))
+    if parts[0] == "inv_sqrt":
+        return inv_sqrt(float(parts[1]))
+    raise ValueError(spec)

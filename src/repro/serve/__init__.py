@@ -1,0 +1,1 @@
+from .engine import DecodeEngine, greedy_sample, temperature_sample  # noqa: F401

@@ -1,0 +1,95 @@
+"""Batched decode engine over ``lm.decode_step``.
+
+Prefill scans decode_step over the prompt (cache-filling), generation scans
+with sampling. Everything is jitted; the engine serves fixed-batch request
+groups (continuous batching is out of scope — requests are padded to a
+common prompt length).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def greedy_sample(key, logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(temp: float = 1.0):
+    def fn(key, logits):
+        return jax.random.categorical(key, logits.astype(jnp.float32) / temp, axis=-1).astype(jnp.int32)
+
+    return fn
+
+
+@dataclasses.dataclass
+class DecodeEngine:
+    cfg: ModelConfig
+    params: dict
+    cache_len: int
+    batch_size: int
+    window_override: Optional[int] = None
+    sample_fn: Callable = greedy_sample
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        def prefill(params, caches, tokens):
+            # tokens: [B, S] (or [B, K, S]); scan one position at a time
+            S = tokens.shape[-1]
+
+            def body(carry, i):
+                caches = carry
+                tok = jax.lax.dynamic_index_in_dim(tokens, i, axis=-1, keepdims=True)
+                logits, caches = lm.decode_step(
+                    cfg, params, caches, tok, i, window_override=self.window_override
+                )
+                return caches, logits
+
+            caches, logits = jax.lax.scan(body, caches, jnp.arange(S))
+            return caches, logits[-1]
+
+        def generate(params, caches, last_logits, start_pos, key, n_steps):
+            def body(carry, i):
+                caches, logits, key = carry
+                key, sub = jax.random.split(key)
+                tok = self.sample_fn(sub, logits)
+                tok = tok[..., None] if tok.ndim < 2 or cfg.num_codebooks else tok
+                if cfg.num_codebooks:
+                    tok = tok.reshape(tok.shape[0], cfg.num_codebooks, 1)
+                else:
+                    tok = tok.reshape(tok.shape[0], 1)
+                logits, caches = lm.decode_step(
+                    cfg, params, caches, tok, start_pos + i, window_override=self.window_override
+                )
+                return (caches, logits, key), tok[..., 0]
+
+            (caches, logits, _), toks = jax.lax.scan(
+                body, (caches, last_logits, key), jnp.arange(n_steps)
+            )
+            return caches, logits, jnp.moveaxis(toks, 0, -1)  # [B, ..., n_steps]
+
+        self._prefill = jax.jit(prefill)
+        self._generate = jax.jit(generate, static_argnums=(5,))
+
+    def fresh_caches(self):
+        return lm.cache_init(
+            self.cfg, self.batch_size, self.cache_len, window_override=self.window_override
+        )
+
+    def run(self, prompts: jax.Array, n_new_tokens: int, seed: int = 0):
+        """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n]."""
+        caches = self.fresh_caches()
+        caches, last_logits = self._prefill(self.params, caches, prompts)
+        start = prompts.shape[-1]
+        _, _, toks = self._generate(
+            self.params, caches, last_logits, start, jax.random.PRNGKey(seed), n_new_tokens
+        )
+        return toks

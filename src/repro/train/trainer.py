@@ -1,0 +1,123 @@
+"""Training loop wiring: model + optimizer + compressed downlink.
+
+One MARINA-P round per train step (uplink exact, downlink compressed):
+
+    workers:  g_i = grad_{w_i} loss(w_i, batch_i)      [vmap over W axis]
+    server:   g = mean_i g_i                           [all-reduce]
+              x_new, opt = optimizer(g, x, lr)         [fp32 master, ZeRO-1]
+    downlink: w_i += Q_i(x_new - x)  or full sync      [compressed broadcast]
+
+``downlink=None`` is the exact-broadcast baseline (classic data-parallel:
+w_i = x always). ``EF21PDownlink`` keeps one synchronized shift tree.
+Polyak adaptive LR (the paper's (13), with f* estimate) is available as
+``polyak=...`` — it consumes only quantities already on the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+from .downlink import EF21PDownlink, MarinaPDownlink
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    n_workers: int = 4
+    remat: bool = True
+    attn_chunk: int = 512
+    weight_dtype: Any = jnp.float32       # worker replica dtype
+    polyak_factor: float = 0.0            # >0: Polyak LR instead of schedule
+    polyak_f_star: float = 0.0
+    window_override: Optional[int] = None
+    remat_policy: Optional[str] = None    # None/"full" | "dots" (§Perf C2)
+    act_spec: Any = None                  # within-worker activation spec (§Perf C3)
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainerConfig, downlink, optimizer: Optimizer, key):
+    server = lm.lm_init(cfg, key)
+    state = {
+        "server": server,
+        "opt": optimizer.init(server),
+        "step": jnp.zeros((), jnp.int32),
+        "bits_per_worker": jnp.zeros((), jnp.float32),
+    }
+    if downlink is not None:
+        workers = downlink.init_workers(server)
+        state["workers"] = jax.tree.map(lambda t: t.astype(tcfg.weight_dtype), workers)
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainerConfig,
+    downlink,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+):
+    """Returns jittable (state, batch, key) -> (state, metrics).
+
+    batch leaves have a leading worker axis [W, B_local, ...].
+    """
+
+    def loss_of(params, shard):
+        return lm.loss_fn(
+            cfg, params, shard,
+            chunk=tcfg.attn_chunk, remat=tcfg.remat,
+            window_override=tcfg.window_override,
+            remat_policy=tcfg.remat_policy,
+            act_spec=tcfg.act_spec,
+        )
+
+    grad_fn = jax.value_and_grad(loss_of)
+
+    def train_step(state, batch, key):
+        server = state["server"]
+        # ---- workers: forward/backward on their own replica -----------------
+        if downlink is None:
+            losses, grads_w = jax.vmap(lambda shard: grad_fn(server, shard))(batch)
+        elif isinstance(downlink, EF21PDownlink):
+            shift = state["workers"]
+            losses, grads_w = jax.vmap(lambda shard: grad_fn(shift, shard))(batch)
+        else:
+            workers = state["workers"]
+            losses, grads_w = jax.vmap(grad_fn)(workers, batch)
+        # ---- uplink: exact aggregation --------------------------------------
+        grads = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads_w)
+        loss = jnp.mean(losses)
+        gnorm_sq = sum(jnp.sum(g * g) for g in jax.tree.leaves(grads))
+        # ---- server master update --------------------------------------------
+        if tcfg.polyak_factor > 0:
+            lr = tcfg.polyak_factor * jnp.maximum(loss - tcfg.polyak_f_star, 0.0) / jnp.maximum(gnorm_sq, 1e-20)
+        else:
+            lr = lr_fn(state["step"])
+        server_new, opt_new = optimizer.update(grads, state["opt"], server, lr)
+        new_state = {
+            "server": server_new,
+            "opt": opt_new,
+            "step": state["step"] + 1,
+            "bits_per_worker": state["bits_per_worker"],
+        }
+        metrics = {"loss": loss, "grad_norm": jnp.sqrt(gnorm_sq), "lr": lr}
+        # ---- downlink: compressed broadcast ----------------------------------
+        if downlink is None:
+            pass
+        elif isinstance(downlink, EF21PDownlink):
+            shift_new, bits = downlink.round(key, server_new, state["workers"])
+            new_state["workers"] = shift_new
+            new_state["bits_per_worker"] = state["bits_per_worker"] + bits
+            metrics["drift"] = downlink.worker_drift(server_new, shift_new)
+        else:
+            workers_new, bits = downlink.round(key, server_new, server, state["workers"])
+            new_state["workers"] = workers_new
+            new_state["bits_per_worker"] = state["bits_per_worker"] + bits
+            metrics["drift"] = downlink.worker_drift(server_new, workers_new)
+        metrics["bits_per_worker"] = new_state["bits_per_worker"]
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run, and only the dry-run, forces 512
+# placeholder devices in its own process — see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,161 @@
+"""Definition 2/3 properties of every compressor (hypothesis + statistics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+DIMS = st.integers(min_value=8, max_value=200)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _x(d, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+# ---------------------------------------------------------------------------
+# contraction (Definition 3): E||C(x)-x||^2 <= (1-alpha)||x||^2
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=DIMS, seed=SEEDS, k=st.integers(1, 8))
+def test_topk_contractive(d, seed, k):
+    x = _x(d, seed)
+    comp = C.TopK(k=k)
+    err = jnp.sum((comp(None, x) - x) ** 2)
+    alpha = comp.alpha(d)
+    assert float(err) <= (1 - alpha) * float(jnp.sum(x**2)) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS, kb=st.integers(1, 16), block=st.sampled_from([16, 32, 64]))
+def test_block_topk_contractive(seed, kb, block):
+    d = 4 * block
+    x = _x(d, seed)
+    comp = C.BlockTopK(k_per_block=kb, block=block)
+    err = jnp.sum((comp(None, x) - x) ** 2)
+    assert float(err) <= (1 - comp.alpha(d)) * float(jnp.sum(x**2)) + 1e-5
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 2.0, 0.01, -3.0])
+    out = C.TopK(k=2)(None, x)
+    np.testing.assert_allclose(out, [0.0, -5.0, 0.0, 0.0, -3.0])
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness (Definition 2): E[Q(x)] = x (statistical), omega bound
+# ---------------------------------------------------------------------------
+
+
+def _check_unbiased(comp, d, n_samples=4000, tol=0.12):
+    x = _x(d, 0)
+    keys = jax.random.split(jax.random.PRNGKey(1), n_samples)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    mean_err = jnp.linalg.norm(jnp.mean(qs, 0) - x) / jnp.linalg.norm(x)
+    assert float(mean_err) < tol, float(mean_err)
+    # omega bound: E||Q(x)-x||^2 <= omega ||x||^2 (allow 10% stat slack)
+    var = jnp.mean(jnp.sum((qs - x) ** 2, axis=-1))
+    bound = comp.omega(d) * jnp.sum(x**2)
+    assert float(var) <= 1.1 * float(bound) + 1e-6, (float(var), float(bound))
+
+
+def test_randk_unbiased():
+    _check_unbiased(C.RandK(k=8), 32)
+
+
+def test_bernk_unbiased():
+    _check_unbiased(C.BernK(k=8), 32)
+
+
+def test_natural_unbiased():
+    _check_unbiased(C.NaturalCompression(), 32, tol=0.05)
+
+
+def test_rotk_unbiased():
+    _check_unbiased(C.RotK(n=4, worker=2), 32)
+
+
+def test_permk_unbiased():
+    _check_unbiased(C.PermK(n=4, worker=1), 32)
+
+
+# ---------------------------------------------------------------------------
+# correlated-family identities
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, n=st.sampled_from([2, 4, 8]))
+def test_permk_exact_mean(seed, n):
+    """(1/n) sum_i Q_i(x) = x deterministically (Definition 5 key property)."""
+    d = 8 * n
+    x = _x(d, seed)
+    key = jax.random.PRNGKey(seed)
+    total = sum(C.PermK(n=n, worker=i)(key, x) for i in range(n))
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(x), rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, n=st.sampled_from([2, 4, 8]), d=st.sampled_from([16, 64, 96]))
+def test_rotk_exact_mean(seed, n, d):
+    """RotK inherits PermK's exact partition identity (DESIGN.md §2)."""
+    x = _x(d, seed)
+    key = jax.random.PRNGKey(seed)
+    total = sum(C.RotK(n=n, worker=i)(key, x) for i in range(n))
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(x), rtol=2e-5, atol=1e-6)
+
+
+def test_permk_disjoint_supports():
+    n, d = 4, 32
+    x = jnp.ones((d,))
+    key = jax.random.PRNGKey(3)
+    masks = [np.asarray(C.PermK(n=n, worker=i)(key, x) != 0) for i in range(n)]
+    overlap = np.zeros(d, dtype=int)
+    for m in masks:
+        overlap += m
+    assert (overlap == 1).all()  # exact partition
+
+
+# ---------------------------------------------------------------------------
+# expected density (Definition 4) and scaled-unbiased lemma
+# ---------------------------------------------------------------------------
+
+
+def test_expected_density():
+    assert C.TopK(k=5).expected_density(100) == 5
+    assert C.RandK(k=7).expected_density(100) == 7
+    assert C.PermK(n=10).expected_density(100) == 10
+    assert C.BlockTopK(k_per_block=4, block=16).expected_density(64) == 16
+    assert C.Identity().expected_density(9) == 9
+
+
+def test_scaled_unbiased_is_contractive():
+    d = 64
+    inner = C.RandK(k=8)
+    comp = C.ScaledUnbiased(inner=inner)
+    x = _x(d, 5)
+    keys = jax.random.split(jax.random.PRNGKey(2), 3000)
+    errs = jax.vmap(lambda k: jnp.sum((comp(k, x) - x) ** 2))(keys)
+    alpha = comp.alpha(d)
+    assert float(jnp.mean(errs)) <= 1.1 * (1 - alpha) * float(jnp.sum(x**2))
+
+
+def test_make_compressor_registry():
+    assert isinstance(C.make_compressor("topk:4", d=100), C.TopK)
+    assert isinstance(C.make_compressor("randk:4", d=100), C.RandK)
+    assert isinstance(C.make_compressor("permk", d=100, n=4, worker=1), C.PermK)
+    assert isinstance(C.make_compressor("natural", d=100), C.NaturalCompression)
+    assert isinstance(C.make_compressor("identity", d=100), C.Identity)
+    with pytest.raises(ValueError):
+        C.make_compressor("bogus", d=10)
+
+
+def test_tree_compress_roundtrip_structure():
+    tree = {"a": jnp.ones((3, 4)), "b": {"c": jnp.zeros((5,))}}
+    out = C.tree_compress(C.TopK(k=2), None, tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert out["a"].shape == (3, 4)

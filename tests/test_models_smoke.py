@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (mandated): reduced same-family variant,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data import SyntheticLMData
+from repro.models import lm
+from repro.optim import make_optimizer
+from repro.optim.schedules import constant_lr
+from repro.train import TrainerConfig, init_state, make_downlink, make_train_step
+
+ARCHS = list(configs.ALIASES)
+
+
+def _batch(cfg, key, B=2, S=64):
+    if cfg.num_codebooks:
+        return {"tokens": jax.random.randint(key, (B, cfg.num_codebooks, S), 0, cfg.vocab_size)}
+    if cfg.num_patches:
+        return {
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "patches": jax.random.normal(key, (B, cfg.num_patches, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = configs.get_smoke(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = lm.lm_init(cfg, key)
+    batch = _batch(cfg, key)
+    logits = jax.jit(lambda p, b: lm.forward(cfg, p, b, chunk=32))(params, batch)
+    B, S = 2, 64
+    if cfg.num_codebooks:
+        assert logits.shape == (B, cfg.num_codebooks, S, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_no_nan(arch):
+    cfg = configs.get_smoke(arch)
+    tcfg = TrainerConfig(n_workers=2, attn_chunk=32)
+    dl = make_downlink("marina:perm", 2)
+    opt = make_optimizer("adamw")
+    state = init_state(cfg, tcfg, dl, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg, dl, opt, constant_lr(1e-3)))
+    data = SyntheticLMData(cfg, 2, 2, 64)
+    l0 = None
+    for i in range(3):
+        state, m = step(state, data.batch(i), jax.random.fold_in(jax.random.PRNGKey(1), i))
+        assert not bool(jnp.isnan(m["loss"]))
+        if l0 is None:
+            l0 = float(m["loss"])
+    assert float(m["loss"]) < l0 + 1.0  # sane trajectory (not exploding)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact assigned hyperparameters."""
+    cfg = configs.get(arch)
+    expect = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expect, (arch, got, expect)
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6 and cfg.moe.num_shared == 2
+        assert cfg.mla.kv_lora_rank == 512 and cfg.moe.d_ff_expert == 1536
+    if arch == "llama4-maverick-400b-a17b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 1
+    if arch == "zamba2-1.2b":
+        assert cfg.mamba.state_dim == 64
+    if arch == "gemma3-1b":
+        pattern = cfg.block_pattern
+        assert sum(k == "attn" for k in pattern) * 5 <= sum(k == "attn_local" for k in pattern) + 5
+    if arch == "musicgen-large":
+        assert cfg.num_codebooks == 4
+    if arch == "rwkv6-1.6b":
+        assert all(k == "rwkv" for k in cfg.block_pattern)
+
+
+def test_param_counts_in_family_range():
+    """Total params should be within ~35% of the nameplate size."""
+    expect = {
+        "zamba2-1.2b": 1.2e9,
+        "starcoder2-7b": 7e9,
+        "gemma-2b": 2.5e9,
+        "deepseek-v2-236b": 236e9,
+        "musicgen-large": 3.3e9,
+        "llama4-maverick-400b-a17b": 400e9,
+        "gemma3-1b": 1.0e9,
+        "pixtral-12b": 12e9,
+        "rwkv6-1.6b": 1.6e9,
+        "minitron-4b": 4e9,
+    }
+    for arch, n in expect.items():
+        cfg = configs.get(arch)
+        got = cfg.param_count()
+        assert 0.5 * n < got < 1.6 * n, (arch, got, n)

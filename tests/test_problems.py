@@ -1,0 +1,71 @@
+"""Algorithm 3 datagen and the L1 oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems as P
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return P.generate_problem(n=6, d=40, noise_scale=1.0, seed=3)
+
+
+def test_matrices_symmetric(prob):
+    A = np.asarray(prob.A)
+    np.testing.assert_allclose(A, np.swapaxes(A, 1, 2), atol=1e-6)
+
+
+def test_mean_matrix_min_eig_is_mu():
+    prob = P.generate_problem(n=5, d=30, noise_scale=0.5, seed=1, mu=1e-6)
+    Abar = np.asarray(prob.A).mean(0)
+    lam = np.linalg.eigvalsh(Abar).min()
+    assert lam == pytest.approx(1e-6, abs=1e-4)
+
+
+def test_fstar_zero_at_origin(prob):
+    assert float(prob.f(jnp.zeros(prob.d))) == 0.0
+
+
+def test_subgradient_is_valid(prob):
+    """Convexity: f(y) >= f(x) + <g, y - x> for the analytic subgradient."""
+    key = jax.random.PRNGKey(0)
+    for i in range(5):
+        kx, ky, key = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (prob.d,))
+        y = jax.random.normal(ky, (prob.d,))
+        g = prob.subgrad(x)
+        lhs = float(prob.f(y))
+        rhs = float(prob.f(x) + g @ (y - x))
+        assert lhs >= rhs - 1e-4
+
+
+def test_subgrad_matches_autodiff_at_smooth_points(prob):
+    """Where A_i x has no zero coords, |.|_1 is differentiable."""
+    x = jnp.ones((prob.d,)) * 0.7  # generic point
+    g_analytic = prob.subgrad(x)
+    g_auto = jax.grad(lambda z: prob.f(z))(x)
+    np.testing.assert_allclose(np.asarray(g_analytic), np.asarray(g_auto), rtol=1e-5, atol=1e-6)
+
+
+def test_lipschitz_bounds_subgradients(prob):
+    """||df_i(x)|| <= L_{0,i} sqrt(d) (the paper's App.A bound)."""
+    key = jax.random.PRNGKey(7)
+    xs = jax.random.normal(key, (prob.n, prob.d))
+    gs = prob.subgrad_all(xs)
+    norms = jnp.linalg.norm(gs, axis=-1)
+    bound = prob.L0i * np.sqrt(prob.d)
+    assert (np.asarray(norms) <= np.asarray(bound) + 1e-4).all()
+
+
+def test_sigma_A_monotone_in_noise():
+    sigmas = [
+        P.generate_problem(n=8, d=30, noise_scale=s, seed=0).sigma_A for s in (0.1, 1.0, 10.0)
+    ]
+    assert sigmas[0] < sigmas[1] < sigmas[2]
+
+
+def test_paper_sign_convention():
+    out = P.paper_sign(jnp.array([-1.0, 0.0, 2.0]))
+    np.testing.assert_allclose(np.asarray(out), [-1.0, 1.0, 1.0])

@@ -1,0 +1,99 @@
+"""Sharding rules: every generated PartitionSpec divides its leaf's shape,
+for all 10 architectures and all layouts, on both production meshes."""
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import sharding as sh
+from repro.models import lm
+
+SINGLE = types.SimpleNamespace(shape={"data": 16, "model": 16}, axis_names=("data", "model"))
+MULTI = types.SimpleNamespace(
+    shape={"pod": 2, "data": 16, "model": 16}, axis_names=("pod", "data", "model")
+)
+
+
+def _axis_size(mesh, ax):
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _check_specs(tree_shape, specs, mesh, expect_leading_worker=False):
+    leaves_s, _ = jax.tree_util.tree_flatten(tree_shape)
+    leaves_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves_s) == len(leaves_p)
+    for leaf, spec in zip(leaves_s, leaves_p):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            assert dim % _axis_size(mesh, ax) == 0, (spec, leaf.shape)
+        if expect_leading_worker and leaf.shape:
+            assert tuple(spec) and tuple(spec)[0] is not None
+
+
+@pytest.mark.parametrize("arch", list(configs.ALIASES))
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["16x16", "2x16x16"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = configs.get(arch)
+    shape = jax.eval_shape(lambda k: lm.lm_init(cfg, k), jax.random.PRNGKey(0))
+    for layout in ("server", "serve"):
+        specs = sh.param_specs(shape, mesh, layout)
+        _check_specs(shape, specs, mesh)
+    W = 32 if "pod" in mesh.axis_names else 16
+    wshape = jax.tree.map(lambda l: jax.ShapeDtypeStruct((W,) + l.shape, l.dtype), shape)
+    wspecs = sh.param_specs(wshape, mesh, "worker")
+    _check_specs(wshape, wspecs, mesh, expect_leading_worker=True)
+
+
+def test_tensor_parallel_covers_big_leaves():
+    """The bulk of parameter bytes must actually be model-sharded."""
+    cfg = configs.get("starcoder2-7b")
+    shape = jax.eval_shape(lambda k: lm.lm_init(cfg, k), jax.random.PRNGKey(0))
+    specs = sh.param_specs(shape, SINGLE, "server")
+    leaves_s = jax.tree.leaves(shape)
+    leaves_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    sharded = sum(
+        l.size for l, p in zip(leaves_s, leaves_p) if any(a == "model" for a in tuple(p))
+    )
+    total = sum(l.size for l in leaves_s)
+    assert sharded / total > 0.95
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["16x16", "2x16x16"])
+def test_cache_specs(mesh):
+    cfg = configs.get_smoke("gemma-2b")
+    # decode_32k-style: batch divisible
+    caches = jax.eval_shape(lambda: lm.cache_init(cfg, 128, 1024))
+    specs = sh.cache_specs(caches, mesh, 128)
+    _check_specs(caches, specs, mesh)
+    # long_500k-style: batch 1 -> sequence dim sharded
+    caches1 = jax.eval_shape(lambda: lm.cache_init(cfg, 1, 8192))
+    specs1 = sh.cache_specs(caches1, mesh, 1)
+    _check_specs(caches1, specs1, mesh)
+    flat = jax.tree.leaves(specs1, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert any(any(a is not None for a in tuple(p)) for p in flat), "seq dim should shard"
+
+
+def test_moe_expert_parallel():
+    cfg = configs.get("deepseek-v2-236b")
+    shape = jax.eval_shape(lambda k: lm.lm_init(cfg, k), jax.random.PRNGKey(0))
+    specs = sh.param_specs(shape, SINGLE, "server")
+    found = []
+
+    def visit(path, spec):
+        ps = sh._path_str(path)
+        if "moe" in ps and "w_in" in ps and "shared" not in ps:
+            found.append(tuple(spec))
+
+    jax.tree_util.tree_map_with_path(
+        visit, specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )
+    assert found and all("model" in sp for sp in found), found

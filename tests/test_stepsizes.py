@@ -1,0 +1,83 @@
+"""Theory constants and stepsize formulas of Theorems 1 & 2."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsizes as S
+
+
+def test_B_star_limits():
+    # alpha=1 (no compression): B* = 1 — matches uncompressed SM constant
+    assert S.ef21p_B_star(1.0) == 1.0
+    # B* <= 4/alpha - 1 (paper eq. 100)
+    for a in [0.01, 0.1, 0.5, 0.9]:
+        assert S.ef21p_B_star(a) <= 4.0 / a - 1.0 + 1e-9
+    # decreasing in alpha
+    vals = [S.ef21p_B_star(a) for a in [0.1, 0.3, 0.5, 0.9]]
+    assert all(x > y for x, y in zip(vals, vals[1:]))
+
+
+def test_lambda_star_ef21p():
+    a = 0.36
+    r = math.sqrt(1 - a)
+    assert S.ef21p_lambda_star(a) == pytest.approx(r / (1 - r))
+
+
+def test_marina_B_star():
+    # p=1 (always full sync): Btil* = Lbar^2 — matches uncompressed
+    assert S.marina_p_B_star(2.0, 3.0, omega=5.0, p=1.0) == pytest.approx(4.0)
+    got = S.marina_p_B_star(2.0, 3.0, omega=9.0, p=0.1)
+    expect = 4.0 + 2 * 2 * 3 * math.sqrt(0.9 * 9.0 / 0.1)
+    assert got == pytest.approx(expect)
+
+
+def test_optimal_constant_formulas():
+    V0, L0, a, T = 7.0, 2.0, 0.25, 100
+    g = S.ef21p_optimal_constant(V0, L0, a, T)
+    assert g == pytest.approx(math.sqrt(V0 / (S.ef21p_B_star(a) * L0**2)) / math.sqrt(T))
+    g0 = S.ef21p_optimal_decreasing_gamma0(V0, L0, a, T)
+    assert g0 == pytest.approx(math.sqrt(V0 / (2 * S.ef21p_B_star(a) * L0**2 * math.log(T + 1))))
+
+
+def test_decreasing_schedule():
+    sch = S.Decreasing(gamma0=2.0)
+    assert float(sch(0)) == pytest.approx(2.0)
+    assert float(sch(3)) == pytest.approx(1.0)
+
+
+def test_ef21p_polyak_matches_eq13():
+    a = 0.5
+    sch = S.EF21PPolyak(alpha=a, f_star=1.0)
+    aux = {"f_w": jnp.asarray(3.0), "g_norm_sq": jnp.asarray(4.0)}
+    expect = (3.0 - 1.0) / (S.ef21p_B_star(a) * 4.0)
+    assert float(sch(0, aux)) == pytest.approx(expect)
+
+
+def test_marina_polyak_matches_eq23():
+    omega, p = 9.0, 0.1
+    sch = S.MarinaPPolyak(omega=omega, p=p, f_star=0.0)
+    aux = {
+        "f_w": jnp.asarray(2.0),
+        "g_norm_sq": jnp.asarray(4.0),  # ||g|| = 2
+        "g_sq_mean": jnp.asarray(9.0),  # sqrt = 3
+    }
+    c = math.sqrt((1 - p) * omega / p)
+    denom = 4.0 + 2 * 2.0 * 3.0 * c
+    assert float(sch(0, aux)) == pytest.approx(2.0 / denom, rel=1e-5)
+
+
+def test_polyak_never_negative():
+    sch = S.EF21PPolyak(alpha=0.3, f_star=10.0)
+    aux = {"f_w": jnp.asarray(1.0), "g_norm_sq": jnp.asarray(4.0)}
+    assert float(sch(0, aux)) == 0.0
+
+
+def test_registry():
+    assert isinstance(S.make_stepsize("constant:0.5"), S.Constant)
+    assert isinstance(S.make_stepsize("decreasing:0.1"), S.Decreasing)
+    assert isinstance(S.make_stepsize("polyak_ef21p", alpha=0.2), S.EF21PPolyak)
+    assert isinstance(S.make_stepsize("polyak_marina_p", omega=3.0, p=0.25), S.MarinaPPolyak)
+    with pytest.raises(ValueError):
+        S.make_stepsize("bogus")
