@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   stepsize_grid      Table 3/6  tuned Polyak factor grid
   comm_complexity    Cor. 1/2   rounds-to-eps vs closed-form complexity
   kernel_bench       —          Pallas kernel (interpret) microbenchmarks
+  wire_bench         DESIGN §3  wire codec throughput (also a standalone CLI
+                                with measured-vs-analytic parity checks)
   roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
 
 Select subsets: ``python -m benchmarks.run fig1 table2 ...`` (default: all
@@ -26,6 +28,7 @@ def main() -> None:
         roofline_report,
         stepsize_grid,
         table2_sigma,
+        wire_bench,
     )
 
     suites = {
@@ -34,11 +37,12 @@ def main() -> None:
         "stepsize_grid": stepsize_grid.bench,
         "comm_complexity": comm_complexity.bench,
         "kernels": kernel_bench.bench,
+        "wire": wire_bench.bench,
         "roofline": roofline_report.bench,
     }
     selected = [a for a in sys.argv[1:] if a in suites]
     if not selected:
-        selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels"]
+        selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels", "wire"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
     print("name,us_per_call,derived")

@@ -1,0 +1,136 @@
+"""Wire codec benchmark: throughput + measured-vs-analytic parity.
+
+Two sections:
+
+* **throughput** — encode/decode GB/s of the host codecs (sparse, natural,
+  dense) and the on-device pack/unpack kernels (interpret mode on CPU);
+  rates are measured against the *dense fp32 payload* the codec represents.
+* **parity** — runs MARINA-P (same / ind / perm) and EF21-P on the paper's
+  L1 workload with ``measure_wire=True`` and reports measured wire
+  bits/round next to the analytic CommLedger (value_bits matched to fp32).
+  The three broadcast modes must agree within 5% (acceptance criterion);
+  ``--smoke`` shrinks sizes/rounds and exits non-zero on violation (CI).
+
+Usage: PYTHONPATH=src python benchmarks/wire_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import wire
+from repro.core import compressors as C
+from repro.core import ef21p, marina_p, problems, stepsizes
+from repro.kernels import ops
+
+
+def _time(fn, iters=5):
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def throughput_rows(smoke: bool):
+    d = 1 << 16 if smoke else 1 << 20
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal(d).astype(np.float32)
+    sparse_vec = np.where(rng.random(d) < 1 / 16, dense, 0.0).astype(np.float32)
+    nat = np.asarray(
+        C.NaturalCompression()(jax.random.PRNGKey(0), jnp.asarray(dense))
+    )
+    payload_gb = dense.nbytes / 1e9
+
+    rows = []
+    for name, enc_fn in (
+        ("sparse/encode", lambda: wire.encode_sparse(sparse_vec)),
+        ("natural/encode", lambda: wire.encode_natural(nat)),
+        ("dense/encode", lambda: wire.encode_dense(dense)),
+    ):
+        dt = _time(enc_fn)
+        buf = enc_fn()
+        rows.append((name, payload_gb / dt, len(buf)))
+        dec = lambda b=buf: wire.decode(b)
+        rows.append((name.replace("encode", "decode"), payload_gb / _time(dec), len(buf)))
+
+    width = wire.index_width(d)
+    idx = np.nonzero(sparse_vec)[0].astype(np.uint32)
+    vals_j = jnp.asarray(idx)
+    pack = lambda: ops.pack_bits(vals_j, width=width)
+    packed = pack()
+    unpack = lambda: ops.unpack_bits(packed, width=width, count=idx.size)
+    pack_gb = idx.size * 4 / 1e9
+    rows.append((f"kernels/pack_bits[w={width}]", pack_gb / _time(pack), int(packed.size * 4)))
+    rows.append((f"kernels/unpack_bits[w={width}]", pack_gb / _time(unpack), int(idx.size * 4)))
+    return rows
+
+
+def parity_rows(smoke: bool):
+    d, n = (256, 4) if smoke else (1024, 4)
+    T = 30 if smoke else 200
+    prob = problems.generate_problem(n=n, d=d, noise_scale=1.0, seed=0)
+    ss = stepsizes.Constant(gamma=0.02)
+    rows = []
+    for mode in ("same", "ind", "perm"):
+        h = marina_p.run(
+            prob, mode=mode, k=d // n, p=1.0 / n, stepsize=ss, T=T, measure_wire=True
+        )
+        a, w = h["wire_model_ledger"].s2w_bits, h["wire_bits_total"]
+        rows.append((f"marina_p/{mode}", a / T, w / T, 100.0 * (w - a) / a))
+    h = ef21p.run(
+        prob, C.BlockTopK(k_per_block=16, block=128), ss, T=T, measure_wire=True
+    )
+    a, w = h["wire_model_ledger"].s2w_bits, h["wire_bits_total"]
+    rows.append(("ef21p/block_topk", a / T, w / T, 100.0 * (w - a) / a))
+    return rows
+
+
+def bench():
+    """benchmarks.run harness adapter: (name, us_per_call, derived) rows."""
+    d = 1 << 16
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal(d).astype(np.float32)
+    sparse_vec = np.where(rng.random(d) < 1 / 16, dense, 0.0).astype(np.float32)
+    rows = []
+    for name, fn in (
+        ("wire/sparse_encode", lambda: wire.encode_sparse(sparse_vec)),
+        ("wire/sparse_decode", lambda b=wire.encode_sparse(sparse_vec): wire.decode(b)),
+        ("wire/dense_encode", lambda: wire.encode_dense(dense)),
+    ):
+        dt = _time(fn)
+        rows.append((name, dt * 1e6, f"{dense.nbytes / 1e9 / dt:.3f}GB/s"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes + assert parity (CI)")
+    args = ap.parse_args(argv)
+
+    print("== codec throughput (dense-payload GB/s) ==")
+    for name, gbs, nbytes in throughput_rows(args.smoke):
+        print(f"{name:32s} {gbs:8.3f} GB/s   ({nbytes} wire bytes)")
+
+    print("\n== measured vs analytic bits/round ==")
+    failures = []
+    for name, analytic, measured, pct in parity_rows(args.smoke):
+        print(f"{name:24s} analytic={analytic:12.1f}  wire={measured:12.1f}  diff={pct:+.2f}%")
+        if name.startswith("marina_p/") and abs(pct) > 5.0:
+            failures.append((name, pct))
+    if failures:
+        print(f"PARITY FAILURES: {failures}", file=sys.stderr)
+        return 1
+    print("parity OK (marina_p modes within 5%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,8 +25,27 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    from jax import shard_map as _shard_map
+else:  # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable shard_map: old jax calls it ``check_rep``, very old
+    jax supports neither kwarg — fall back by dropping it."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=check_vma)
+    except TypeError:
+        pass
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=check_vma)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 from .compressors import RandK, TopK
 from .problems import paper_sign
@@ -104,9 +123,12 @@ def make_marina_p_spmd_step(
             mask = _randk_mask(k_comp, d, k)
             Q = jnp.broadcast_to(mask * delta * (d / k), (local_n, d))
         elif mode == "ind":
+            # per-worker keys via split, matching marina_p.make_broadcast
+            # exactly (fold_in would give different masks than the reference)
+            keys = jax.random.split(k_comp, n)
+
             def one(gid):
-                kk = jax.random.fold_in(k_comp, gid)
-                return _randk_mask(kk, d, k) * delta * (d / k)
+                return _randk_mask(keys[gid], d, k) * delta * (d / k)
 
             Q = jax.vmap(one)(gids)
         elif mode == "perm":

@@ -44,8 +44,13 @@ def lyapunov(state: EF21PState, x_star: jax.Array, alpha: float) -> jax.Array:
     )
 
 
-def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsize):
-    """Build a jittable round function (state, key) -> (state, metrics)."""
+def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsize,
+              *, return_delta: bool = False):
+    """Build a jittable round function (state, key) -> (state, metrics).
+
+    ``return_delta=True`` additionally returns the broadcast message
+    (the compressed difference) so the host can serialize it (wire
+    measurement path)."""
 
     def step(state: EF21PState, key):
         # --- workers: subgradients at the shared shift w^t ------------------
@@ -68,6 +73,8 @@ def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsiz
             "gamma": gamma,
             "delta_nnz": jnp.sum(delta != 0).astype(jnp.float32),
         }
+        if return_delta:
+            metrics["delta"] = delta
         return EF21PState(x=x_new, w=w_new, t=state.t + 1), metrics
 
     return step
@@ -82,19 +89,38 @@ def run(
     bit_budget: Optional[float] = None,
     seed: int = 0,
     record_every: int = 1,
+    measure_wire: bool = False,
+    wire_mag: str = "fp32",
 ):
     """Host loop driving the jitted round; returns history dict.
 
     Stops after T rounds or when the per-worker downlink ``bit_budget``
-    (paper App. A communication budgets) is exhausted.
+    (paper App. A communication budgets) is exhausted. ``measure_wire=True``
+    serializes each broadcast with the repro.wire sparse codec and tracks
+    measured bits next to a second analytic ledger whose value_bits is
+    matched to the wire magnitude dtype (hist["wire_model_ledger"] —
+    DESIGN.md §3.5); the primary ledger keeps the paper's 64-bit model so
+    ``bit_budget`` semantics do not change under measurement.
     """
     assert T is not None or bit_budget is not None
+    wire_model_ledger = None
+    if measure_wire:
+        import numpy as np
+
+        from repro import wire
+
+        wire_model_ledger = CommLedger(
+            model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
+        )
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, comp, stepsize))
+    step = jax.jit(make_step(problem, comp, stepsize, return_delta=measure_wire))
     state = init(problem.x0)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": []}
+    if measure_wire:
+        hist["wire_bits"] = []
+    wire_total = 0.0
     t = 0
     while True:
         if T is not None and t >= T:
@@ -105,13 +131,24 @@ def run(
         state, m = step(state, sub)
         ledger.log_s2w_sparse(float(m["delta_nnz"]))
         ledger.tick()
+        if measure_wire:
+            wire_model_ledger.log_s2w_sparse(float(m["delta_nnz"]))
+            wire_model_ledger.tick()
+            wire_total += wire.measured_bits(
+                wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+            )
         if t % record_every == 0:
             hist["t"].append(t)
             hist["f_x"].append(float(m["f_x"]))
             hist["f_w"].append(float(m["f_w"]))
             hist["gamma"].append(float(m["gamma"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
+            if measure_wire:
+                hist["wire_bits"].append(wire_total)
         t += 1
     hist["final_state"] = state
     hist["ledger"] = ledger
+    if measure_wire:
+        hist["wire_bits_total"] = wire_total
+        hist["wire_model_ledger"] = wire_model_ledger
     return hist

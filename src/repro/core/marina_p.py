@@ -98,9 +98,14 @@ def make_broadcast(mode: str, n: int, k: int):
 
 
 def make_step(
-    problem: L1Problem, mode: str, k: int, p: float, stepsize: Stepsize
+    problem: L1Problem, mode: str, k: int, p: float, stepsize: Stepsize,
+    *, return_q: bool = False,
 ):
-    """Build a jittable round: (state, key) -> (state, metrics)."""
+    """Build a jittable round: (state, key) -> (state, metrics).
+
+    ``return_q=True`` additionally returns the per-worker messages Q [n, d]
+    in the metrics so the host can serialize them (wire measurement path).
+    """
     n = problem.n
     bcast, _ = make_broadcast(mode, n, k)
 
@@ -129,6 +134,9 @@ def make_step(
             "q_nnz_mean": jnp.mean(jnp.sum(Q != 0, axis=-1).astype(jnp.float32)),
             "drift": jnp.mean(jnp.sum((W_new - x_new) ** 2, axis=-1)),
         }
+        if return_q:
+            metrics["Q"] = Q
+            metrics["x_new"] = x_new
         return MarinaPState(x=x_new, W=W_new, t=state.t + 1), metrics
 
     return step
@@ -145,15 +153,37 @@ def run(
     bit_budget: Optional[float] = None,
     seed: int = 0,
     record_every: int = 1,
+    measure_wire: bool = False,
+    wire_mag: str = "fp32",
 ):
-    """Host loop; stops on T rounds or per-worker downlink bit budget."""
+    """Host loop; stops on T rounds or per-worker downlink bit budget.
+
+    ``measure_wire=True`` additionally serializes every round's messages
+    with the repro.wire codecs and tracks *measured* bits/worker next to a
+    second analytic ledger whose value_bits is matched to the wire
+    magnitude dtype (hist["wire_model_ledger"] — DESIGN.md §3.5). The
+    primary ledger keeps the paper's 64-bit model, so ``bit_budget``
+    semantics are identical with and without measurement.
+    """
     assert T is not None or bit_budget is not None
+    wire_model_ledger = None
+    if measure_wire:
+        import numpy as np
+
+        from repro import wire
+
+        wire_model_ledger = CommLedger(
+            model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
+        )
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, mode, k, p, stepsize))
+    step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=measure_wire))
     state = init(problem.x0, problem.n)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [], "drift": []}
+    if measure_wire:
+        hist["wire_bits"] = []
+    wire_total = 0.0
     t = 0
     while True:
         if T is not None and t >= T:
@@ -162,11 +192,31 @@ def run(
             break
         key, sub = jax.random.split(key)
         state, m = step(state, sub)
-        if float(m["full_sync"]) > 0:
+        full_sync = float(m["full_sync"]) > 0
+        if full_sync:
             ledger.log_s2w_dense()
         else:
             ledger.log_s2w_sparse(float(m["q_nnz_mean"]))
         ledger.tick()
+        if measure_wire:
+            if full_sync:
+                wire_model_ledger.log_s2w_dense()
+                wire_total += wire.measured_bits(
+                    wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
+                )
+            else:
+                wire_model_ledger.log_s2w_sparse(float(m["q_nnz_mean"]))
+                Q = np.asarray(m["Q"])
+                if mode == "same":  # all rows identical: one encode suffices
+                    wire_total += wire.measured_bits(
+                        wire.encode_sparse(Q[0], mag=wire_mag)
+                    )
+                else:
+                    wire_total += sum(
+                        wire.measured_bits(wire.encode_sparse(Q[i], mag=wire_mag))
+                        for i in range(Q.shape[0])
+                    ) / Q.shape[0]
+            wire_model_ledger.tick()
         if t % record_every == 0:
             hist["t"].append(t)
             hist["f_x"].append(float(m["f_x"]))
@@ -174,7 +224,12 @@ def run(
             hist["gamma"].append(float(m["gamma"]))
             hist["drift"].append(float(m["drift"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
+            if measure_wire:
+                hist["wire_bits"].append(wire_total)
         t += 1
     hist["final_state"] = state
     hist["ledger"] = ledger
+    if measure_wire:
+        hist["wire_bits_total"] = wire_total
+        hist["wire_model_ledger"] = wire_model_ledger
     return hist

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import l1_subgrad as _l1
+from . import pack as _pack
 from . import permk as _permk
 from . import randk as _randk
 from . import topk as _topk
@@ -55,6 +56,27 @@ def rotk_apply(w, delta, rotation, *, n: int, worker: int, block: int = 1024,
     dp, _ = _pad_to(delta, block)
     out = _permk.rotk_apply(wp, dp, rotation, n=n, worker=worker, block=block, interpret=interpret)
     return out[:d]
+
+
+@partial(jax.jit, static_argnames=("width", "interpret"))
+def pack_bits(values, *, width: int, interpret: bool | None = None):
+    """Bit-pack ``values`` ([n] uint32, each < 2**width) into uint32 words
+    (wire/bitstream.py layout). Zero-pads to block multiples and trims the
+    output to ceil(n*width/32) words."""
+    interpret = _default_interpret() if interpret is None else interpret
+    vpb, _ = _pack.word_block(width)
+    vp, n = _pad_to(values.astype(jnp.uint32), vpb)
+    nwords = -(-n * width // 32)
+    return _pack.pack_bits_device(vp, width=width, interpret=interpret)[:nwords]
+
+
+@partial(jax.jit, static_argnames=("width", "count", "interpret"))
+def unpack_bits(words, *, width: int, count: int, interpret: bool | None = None):
+    """Inverse of :func:`pack_bits`: read ``count`` values of ``width`` bits."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, wpb = _pack.word_block(width)
+    wp, _ = _pad_to(words.astype(jnp.uint32), wpb)
+    return _pack.unpack_bits_device(wp, width=width, interpret=interpret)[:count]
 
 
 @partial(jax.jit, static_argnames=("row_block", "interpret"))

@@ -1,0 +1,105 @@
+"""On-device bitstream pack/unpack kernels (Pallas TPU).
+
+Implements the wire format's bit layout (repro/wire/bitstream.py: LSB-first
+into little-endian uint32 words) on-device, so index/value streams of a
+sparse downlink message can be packed before ever touching the host
+(DESIGN.md §3.4). Bit-interchangeable with the host numpy codec — asserted
+in tests/test_wire.py.
+
+Tiling: blocks are chosen word-aligned (values_per_block * width % 32 == 0),
+so no value crosses a block boundary and each grid step packs its own word
+range independently. Inside a block, value ``i`` contributes a low part to
+word ``(i*width) // 32`` and (when it straddles) a high part to the next
+word; the kernel accumulates both with a broadcast compare-and-sum — pure
+vector ops, no scatter — which lowers to VPU code on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def word_block(width: int, target: int = 512) -> tuple[int, int]:
+    """(values_per_block, words_per_block): the smallest word-aligned value
+    group, replicated up to ~``target`` values per grid step."""
+    g = math.gcd(width, 32)
+    gv, gw = 32 // g, width // g  # values / words per aligned group
+    reps = max(1, target // gv)
+    return gv * reps, gw * reps
+
+
+def _split_parts(v, width: int):
+    """Per-value (low word part, high word part, local word index)."""
+    vpb = v.shape[-1]
+    i = jax.lax.broadcasted_iota(jnp.int32, v.shape, len(v.shape) - 1)
+    pos = i * width
+    word = pos // 32
+    off = (pos % 32).astype(jnp.uint32)
+    lo = v << off  # uint32: overflow bits drop, as intended
+    hi = (v >> jnp.uint32(1)) >> (jnp.uint32(31) - off)  # v >> (32-off); off=0 -> 0
+    return lo, hi, word
+
+
+def _pack_kernel(v_ref, out_ref, *, width: int, wpb: int):
+    v = v_ref[...].astype(jnp.uint32)  # [1, vpb]
+    lo, hi, word = _split_parts(v, width)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, v.shape[-1], wpb), 2)
+    wcol = word[..., None]  # [1, vpb, 1]
+    acc = jnp.where(j == wcol, lo[..., None], jnp.uint32(0))
+    acc = acc + jnp.where(j == wcol + 1, hi[..., None], jnp.uint32(0))
+    out_ref[...] = jnp.sum(acc, axis=1).astype(jnp.uint32)  # [1, wpb]
+
+
+def _unpack_kernel(w_ref, out_ref, *, width: int, vpb: int):
+    w = w_ref[...].astype(jnp.uint32)  # [1, wpb]
+    wpb = w.shape[-1]
+    i = jax.lax.broadcasted_iota(jnp.int32, (1, vpb), 1)
+    pos = i * width
+    word = pos // 32
+    off = (pos % 32).astype(jnp.uint32)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, vpb, wpb), 2)
+    wcol = word[..., None]
+    cur = jnp.sum(jnp.where(j == wcol, w[:, None, :], jnp.uint32(0)), axis=2)
+    nxt = jnp.sum(jnp.where(j == wcol + 1, w[:, None, :], jnp.uint32(0)), axis=2)
+    lo = cur >> off
+    hi = (nxt << jnp.uint32(1)) << (jnp.uint32(31) - off)  # nxt << (32-off); off=0 -> 0
+    mask = jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+    out_ref[...] = ((lo | hi) & mask).astype(jnp.uint32)
+
+
+def pack_bits_device(values: jax.Array, *, width: int, interpret: bool = True) -> jax.Array:
+    """values: [n] uint32 (n % values_per_block == 0). Returns packed words."""
+    vpb, wpb = word_block(width)
+    n = values.shape[-1]
+    assert n % vpb == 0, (n, vpb)
+    nblocks = n // vpb
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, width=width, wpb=wpb),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, vpb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, wpb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, wpb), jnp.uint32),
+        interpret=interpret,
+    )(values.reshape(nblocks, vpb))
+    return out.reshape(nblocks * wpb)
+
+
+def unpack_bits_device(words: jax.Array, *, width: int, interpret: bool = True) -> jax.Array:
+    """words: [nw] uint32 (nw % words_per_block == 0). Returns unpacked values."""
+    vpb, wpb = word_block(width)
+    nw = words.shape[-1]
+    assert nw % wpb == 0, (nw, wpb)
+    nblocks = nw // wpb
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, width=width, vpb=vpb),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, wpb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, vpb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, vpb), jnp.uint32),
+        interpret=interpret,
+    )(words.reshape(nblocks, wpb))
+    return out.reshape(nblocks * vpb)

@@ -30,6 +30,32 @@ def rotk_apply_ref(w, delta, rotation, *, n: int, worker: int):
     return (w + jnp.where(keep, delta * n, 0.0)).astype(w.dtype)
 
 
+def pack_bits_ref(values: jax.Array, width: int) -> jax.Array:
+    """LSB-first bit packing into uint32 words (wire/bitstream.py layout)."""
+    v = values.astype(jnp.uint32)
+    n = v.shape[-1]
+    nwords = -(-n * width // 32)
+    pos = jnp.arange(n, dtype=jnp.int32) * width
+    word = pos // 32
+    off = (pos % 32).astype(jnp.uint32)
+    lo = v << off
+    hi = (v >> jnp.uint32(1)) >> (jnp.uint32(31) - off)  # v >> (32-off); off=0 -> 0
+    out = jnp.zeros(nwords + 1, jnp.uint32).at[word].add(lo).at[word + 1].add(hi)
+    return out[:nwords]
+
+
+def unpack_bits_ref(words: jax.Array, width: int, count: int) -> jax.Array:
+    """Inverse of :func:`pack_bits_ref`."""
+    w = jnp.concatenate([words.astype(jnp.uint32), jnp.zeros(1, jnp.uint32)])
+    pos = jnp.arange(count, dtype=jnp.int32) * width
+    word = pos // 32
+    off = (pos % 32).astype(jnp.uint32)
+    lo = w[word] >> off
+    hi = (w[word + 1] << jnp.uint32(1)) << (jnp.uint32(31) - off)
+    mask = jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+    return (lo | hi) & mask
+
+
 def l1_subgrad_ref(A: jax.Array, x: jax.Array) -> jax.Array:
     y = A.astype(jnp.float32) @ x.astype(jnp.float32)
     s = jnp.where(y >= 0, 1.0, -1.0)

@@ -1,1 +1,1 @@
-from .engine import DecodeEngine, greedy_sample, temperature_sample  # noqa: F401
+from .engine import DecodeEngine, apply_wire_delta, greedy_sample, temperature_sample  # noqa: F401

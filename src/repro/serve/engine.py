@@ -12,10 +12,36 @@ from functools import partial
 from typing import Callable, Optional
 
 import jax
+import jax.flatten_util
 import jax.numpy as jnp
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+
+
+def apply_wire_delta(params, buf: bytes):
+    """Apply a decoded repro.wire downlink message to a parameter pytree.
+
+    The serving-side endpoint of the compressed model broadcast: a training
+    server emits packed wire messages (SPARSE / NATURAL / DENSE over the
+    raveled tree); each replica decodes and adds the delta to its params.
+    SEED messages are rejected — they presume the receiver already holds
+    the replicated delta (a training worker, not a serving replica); see
+    DESIGN.md §3.2.
+    """
+    from repro import wire
+
+    codec, d = wire.peek(buf)
+    if codec == wire.CodecID.SEED:
+        raise ValueError(
+            "SEED wire messages carry no payload; serving replicas need a "
+            "payload codec (SPARSE/NATURAL/DENSE)"
+        )
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    if d != flat.shape[-1]:
+        raise ValueError(f"wire message dimension {d} != param count {flat.shape[-1]}")
+    delta = wire.decode(buf)
+    return unravel(flat + jnp.asarray(delta, flat.dtype))
 
 
 def greedy_sample(key, logits):
@@ -83,6 +109,11 @@ class DecodeEngine:
         return lm.cache_init(
             self.cfg, self.batch_size, self.cache_len, window_override=self.window_override
         )
+
+    def delta_sync(self, buf: bytes) -> None:
+        """Apply a decoded wire delta message to the served params in place
+        (compressed model-update downlink from a training server)."""
+        self.params = apply_wire_delta(self.params, buf)
 
     def run(self, prompts: jax.Array, n_new_tokens: int, seed: int = 0):
         """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n]."""

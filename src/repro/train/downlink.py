@@ -26,6 +26,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.comm_model import CommModel
 from repro.core.compressors import BlockTopK
 
 Array = jax.Array
@@ -126,8 +127,8 @@ class MarinaPDownlink:
         new_workers = jax.lax.cond(c, sync_branch, compress_branch,
                                    (server_new, worker_params))
         d = tree_size(server_new)
-        sparse_bits = (65.0 + math.log2(max(d, 2))) * self.frac * d
-        bits = jnp.where(c, 64.0 * d, sparse_bits)
+        cm = CommModel(d=d)  # single source of truth for the bit formulas
+        bits = jnp.where(c, cm.dense_bits(), cm.sparse_bits(self.frac * d))
         return new_workers, bits
 
     def worker_drift(self, server_params, worker_params) -> Array:
@@ -138,6 +139,79 @@ class MarinaPDownlink:
             server_params,
         )
         return sum(jax.tree.leaves(sq)) / self.n_workers
+
+    def measure_wire(self, key, server_new, server_old, *, mag="fp32") -> dict:
+        """Host-side wire measurement (measure_wire=True path).
+
+        Replays this round's randomness exactly as :meth:`round` consumes it,
+        rebuilds each worker's message over the raveled tree, and serializes
+        it with the repro.wire codecs. Returns measured bits alongside the
+        analytic model's prediction (value_bits matched to ``mag``) and the
+        O(1) seed-only alternative (DESIGN.md §3.5). Not jittable — this is
+        the accounting/verification path, not the training hot path.
+        """
+        import jax.flatten_util  # noqa: F401  (registers jax.flatten_util)
+        import numpy as np
+
+        from repro import wire
+
+        n = self.n_workers
+        d = tree_size(server_new)
+        cm = CommModel(d=d, value_bits=wire.MAG_BITS[wire.mag_dtype(mag)])
+        k_bern, k_comp = jax.random.split(key)
+        c = bool(jax.random.bernoulli(k_bern, self.sync_p))
+        seed_buf = wire.encode_seed(
+            wire.SeedMessage(
+                family=wire.SeedFamily.ROTK if self.mode == "perm" else wire.SeedFamily.BERN,
+                seed=int(np.asarray(
+                    jax.random.key_data(k_comp)
+                    if jnp.issubdtype(k_comp.dtype, jax.dtypes.prng_key)
+                    else k_comp
+                ).ravel()[-1]),
+                round=0, scale=1.0, n=n, worker=0, param=self.frac,
+            ),
+            d,
+        )
+        if c:
+            flat = np.asarray(
+                jax.flatten_util.ravel_pytree(
+                    jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
+                )[0]
+            )
+            bits = float(wire.measured_bits(wire.encode_dense(flat, mag=mag)))
+            return {"full_sync": True, "bits_mean": bits, "bits_per_worker": [bits] * n,
+                    "bits_seed": float(wire.measured_bits(seed_buf)),
+                    "bits_analytic": cm.dense_bits()}
+        leaves_new, _ = jax.tree.flatten(server_new)
+        leaves_old = jax.tree.leaves(server_old)
+        per_worker = []
+        # 'same' mode: every worker's message is identical — encode once
+        for widx in range(1 if self.mode == "same" else n):
+            parts = []
+            for li, (xn, xo) in enumerate(zip(leaves_new, leaves_old)):
+                delta = (xn - xo).astype(jnp.float32)
+                lk = jax.random.fold_in(k_comp, li)
+                if self.mode == "perm":
+                    m = _leaf_rotk_mask(lk, xn.shape, n, widx)
+                    q = jnp.where(m, delta * n, 0)
+                elif self.mode == "ind":
+                    m = _leaf_bern_mask(jax.random.fold_in(lk, widx), xn.shape, self.frac)
+                    q = jnp.where(m, delta / self.frac, 0)
+                else:  # same
+                    m = _leaf_bern_mask(lk, xn.shape, self.frac)
+                    q = jnp.where(m, delta / self.frac, 0)
+                parts.append(np.asarray(q).reshape(-1))
+            buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+            per_worker.append(float(wire.measured_bits(buf)))
+        if self.mode == "same":
+            per_worker = per_worker * n
+        return {
+            "full_sync": False,
+            "bits_mean": sum(per_worker) / n,
+            "bits_per_worker": per_worker,
+            "bits_seed": float(wire.measured_bits(seed_buf)),
+            "bits_analytic": cm.sparse_bits(self.frac * d),
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,11 +239,36 @@ class EF21PDownlink:
         )
         d = tree_size(server_new)
         frac = self.k_per_block / self.block
-        bits = jnp.asarray((65.0 + math.log2(max(d, 2))) * frac * d)
+        bits = jnp.asarray(CommModel(d=d).sparse_bits(frac * d))
         return new_shift, bits
 
     def init_workers(self, server_params):
         return self.init_shift(server_params)
+
+    def measure_wire(self, key, server_new, shift, *, mag="fp32") -> dict:
+        """Host-side wire measurement of one EF21-P broadcast (the block-TopK
+        compressed difference, identical for every worker)."""
+        import numpy as np
+
+        from repro import wire
+
+        comp = self.comp
+        d = tree_size(server_new)
+        cm = CommModel(d=d, value_bits=wire.MAG_BITS[wire.mag_dtype(mag)])
+        parts = [
+            np.asarray(
+                comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
+            )
+            for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
+        ]
+        buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+        frac = self.k_per_block / self.block
+        return {
+            "full_sync": False,
+            "bits_mean": float(wire.measured_bits(buf)),
+            "bits_per_worker": [float(wire.measured_bits(buf))] * self.n_workers,
+            "bits_analytic": cm.sparse_bits(frac * d),
+        }
 
     def worker_drift(self, server_params, shift) -> Array:
         sq = jax.tree.map(

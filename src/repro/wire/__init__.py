@@ -1,0 +1,35 @@
+"""repro.wire — packed bitstream codecs for compressed downlink messages.
+
+Turns the repo's *analytic* bit accounting (core/comm_model.py) into real
+packed byte buffers that can be measured, transported and decoded exactly:
+
+* SPARSE  — (index: ceil(log2 d) bits, sign: 1 bit, magnitude:
+  fp32/fp16/bf16) for RandK / TopK / BlockTopK messages;
+* SEED    — O(1) bytes of RNG coordinates for shared-randomness families
+  (BernK / RotK / PermK); the receiver rematerializes its mask locally;
+* NATURAL — sign + exponent, 9 bits/value, for natural compression;
+* DENSE   — raw values for full-sync broadcast rounds.
+
+Layout reference: DESIGN.md §3. Device-side pack/unpack kernels:
+kernels/pack.py. Measured-vs-analytic parity: benchmarks/wire_bench.py.
+"""
+from .bitstream import from_bytes, n_words, pack_u32, to_bytes, unpack_u32  # noqa: F401
+from .natural import decode_natural, encode_natural  # noqa: F401
+from .registry import codec_for, decode, encode, peek  # noqa: F401
+from .seedonly import apply_seed, decode_seed, encode_seed  # noqa: F401
+from .sparse import decode_dense, decode_sparse, encode_dense, encode_sparse  # noqa: F401
+from .spec import (  # noqa: F401
+    HEADER_BYTES,
+    MAG_BITS,
+    CodecID,
+    MagDType,
+    SeedFamily,
+    SeedMessage,
+    index_width,
+    mag_dtype,
+)
+
+
+def measured_bits(buf: bytes) -> int:
+    """Wire size of an encoded message, in bits."""
+    return 8 * len(buf)

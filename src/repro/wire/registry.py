@@ -1,0 +1,80 @@
+"""Codec registry and top-level encode/decode dispatch.
+
+``decode(buf)`` inspects the common header and routes to the right codec.
+Payload-carrying codecs (SPARSE / NATURAL / DENSE) decode to a dense fp32
+vector standalone; the SEED codec needs the receiver-local ``delta``
+(DESIGN.md §2) and raises without it.
+
+``codec_for`` maps compressor families (core/compressors.py) to their
+natural wire codec, so callers can serialize any compressor output without
+hand-picking a format.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import compressors as C
+
+from .natural import decode_natural, encode_natural
+from .seedonly import apply_seed, decode_seed, encode_seed
+from .sparse import decode_dense, decode_sparse, encode_dense, encode_sparse
+from .spec import HEADER_BYTES, CodecID, SeedMessage, unpack_header
+
+
+def decode(buf: bytes, *, delta=None) -> np.ndarray:
+    """Decode a wire message to a dense fp32 vector [d].
+
+    ``delta`` (receiver-local replicated vector) is required for SEED
+    messages and ignored otherwise.
+    """
+    codec, d = unpack_header(buf)
+    if codec == CodecID.SPARSE:
+        return decode_sparse(buf, HEADER_BYTES, d)
+    if codec == CodecID.NATURAL:
+        return decode_natural(buf, HEADER_BYTES, d)
+    if codec == CodecID.DENSE:
+        return decode_dense(buf, HEADER_BYTES, d)
+    if codec == CodecID.SEED:
+        if delta is None:
+            raise ValueError(
+                "SEED message needs the receiver-local delta to rematerialize"
+            )
+        msg = decode_seed(buf, HEADER_BYTES, d)
+        return apply_seed(msg, delta)
+    raise ValueError(codec)  # pragma: no cover
+
+
+def peek(buf: bytes) -> tuple[CodecID, int]:
+    """(codec, d) of a message without decoding the payload."""
+    return unpack_header(buf)
+
+
+def codec_for(comp: C.Compressor) -> CodecID:
+    """The natural wire codec for a compressor family."""
+    if isinstance(comp, (C.BernK, C.RotK, C.PermK)):
+        return CodecID.SEED
+    if isinstance(comp, C.NaturalCompression):
+        return CodecID.NATURAL
+    if isinstance(comp, C.Identity):
+        return CodecID.DENSE
+    if isinstance(comp, (C.TopK, C.BlockTopK, C.RandK, C.ScaledUnbiased)):
+        return CodecID.SPARSE
+    return CodecID.SPARSE
+
+
+def encode(x, comp: Optional[C.Compressor] = None, *, mag="fp32") -> bytes:
+    """Encode a compressor output with its family's natural payload codec.
+
+    SEED-family compressors still encode here as SPARSE (explicit payload):
+    producing a true O(1) SEED message requires the RNG coordinates, not
+    just the output — use :func:`repro.wire.encode_seed` with a
+    :class:`SeedMessage` for that path.
+    """
+    codec = codec_for(comp) if comp is not None else CodecID.SPARSE
+    if codec == CodecID.NATURAL:
+        return encode_natural(x)
+    if codec == CodecID.DENSE:
+        return encode_dense(x, mag=mag)
+    return encode_sparse(x, mag=mag)

@@ -1,0 +1,74 @@
+"""SEED codec: O(1)-byte messages for shared-randomness compressors
+(DESIGN.md §2 / §3.2).
+
+BernK / RotK / PermK masks are pure functions of (seed, round, worker), so
+the downlink message need not carry indices or values at all when the
+receiver already holds the replicated ``delta`` (the SPMD realization in
+core/distributed.py): it transmits the RNG coordinates and the receiver
+rematerializes its slice locally. The BERN family reuses the counter hash
+from kernels/randk.py bit-for-bit, so a receiver decoding on-TPU via the
+Pallas bernk kernel produces the identical mask.
+
+Payload after the common header (28 bytes, fixed):
+
+    [u8 family][pad x3][u32 seed][u32 round][f32 scale]
+    [u32 n][u32 worker][f32 param]
+"""
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.randk import hash_uniform
+
+from .spec import CodecID, SeedFamily, SeedMessage, pack_header
+
+_PAYLOAD = struct.Struct("<BxxxIIfIIf")
+
+
+def encode_seed(msg: SeedMessage, d: int) -> bytes:
+    return pack_header(CodecID.SEED, d) + _PAYLOAD.pack(
+        int(msg.family),
+        msg.seed & 0xFFFFFFFF,
+        msg.round & 0xFFFFFFFF,
+        msg.scale,
+        msg.n,
+        msg.worker,
+        msg.param,
+    )
+
+
+def decode_seed(buf: bytes, offset: int, d: int) -> SeedMessage:
+    if len(buf) < offset + _PAYLOAD.size:
+        raise ValueError("truncated seed wire message")
+    family, seed, rnd, scale, n, worker, param = _PAYLOAD.unpack_from(buf, offset)
+    return SeedMessage(
+        family=SeedFamily(family), seed=seed, round=rnd, scale=scale,
+        n=n, worker=worker, param=param,
+    )
+
+
+def apply_seed(msg: SeedMessage, delta) -> np.ndarray:
+    """Rematerialize the mask from the RNG coordinates and apply it to the
+    receiver-local ``delta``: Q_i(delta) without any index/value payload."""
+    x = np.ascontiguousarray(np.asarray(delta), dtype=np.float32).reshape(-1)
+    d = x.size
+    if msg.family == SeedFamily.BERN:
+        idx = jnp.arange(d, dtype=jnp.uint32)
+        u = np.asarray(hash_uniform(idx, msg.seed + msg.round, msg.worker))
+        out = np.where(u < msg.param, x / msg.param, 0.0)
+    elif msg.family == SeedFamily.ROTK:
+        r = int(msg.param)
+        keep = (np.arange(d) % msg.n) == ((msg.worker + r) % msg.n)
+        out = np.where(keep, x * msg.n, 0.0)
+    elif msg.family == SeedFamily.PERM:
+        from repro.core.compressors import PermK
+
+        key = jax.random.fold_in(jax.random.PRNGKey(msg.seed), msg.round)
+        out = np.asarray(PermK(n=msg.n, worker=msg.worker)(key, jnp.asarray(x)))
+    else:  # pragma: no cover
+        raise ValueError(msg.family)
+    return (out * msg.scale).astype(np.float32)

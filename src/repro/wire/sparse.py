@@ -1,0 +1,121 @@
+"""SPARSE codec: (index, sign, magnitude) streams for explicit-support
+messages — RandK / TopK / BlockTopK downlink deltas (DESIGN.md §3.1).
+
+Payload after the common header:
+
+    [u8 mag_dtype] [u8 pad x3] [u32 count]
+    [index stream:     count * ceil(log2 d) bits, word-aligned]
+    [sign stream:      count * 1 bit,             word-aligned]
+    [magnitude stream: count * MAG_BITS bits,     word-aligned]
+
+This mirrors the paper's analytic bit model (value_bits + 1 + log2 d per
+non-zero): sign is carried separately from the |value| bits, exactly as
+Definition 1 counts it. fp32 magnitudes round-trip bit-exactly; fp16/bf16
+round the magnitude to the wire dtype (the decoder returns fp32).
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from . import bitstream as bs
+from .spec import CodecID, MAG_BITS, MagDType, index_width, mag_dtype, pack_header
+
+_PAYLOAD = struct.Struct("<BxxxI")
+
+try:  # bf16 comes with jax (ml_dtypes is a hard dependency of jax)
+    import ml_dtypes
+
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    _BF16 = None
+
+
+def _mag_np_dtype(m: MagDType):
+    if m == MagDType.FP32:
+        return np.dtype(np.float32), np.dtype("<u4")
+    if m == MagDType.FP16:
+        return np.dtype(np.float16), np.dtype("<u2")
+    if _BF16 is None:
+        raise RuntimeError("bf16 wire dtype needs ml_dtypes")
+    return _BF16, np.dtype("<u2")
+
+
+def encode_sparse(x, *, mag="fp32") -> bytes:
+    """Encode a dense sparsified fp32 vector (zeros are elided)."""
+    m = mag_dtype(mag)
+    v = np.ascontiguousarray(np.asarray(x), dtype=np.float32).reshape(-1)
+    d = v.size
+    idx = np.nonzero(v)[0].astype(np.uint32)
+    vals = v[idx]
+    sign = np.signbit(vals).astype(np.uint32)
+    fdt, udt = _mag_np_dtype(m)
+    magbits = np.abs(vals).astype(fdt).view(udt).astype(np.uint32)
+    parts = [
+        pack_header(CodecID.SPARSE, d),
+        _PAYLOAD.pack(int(m), idx.size),
+        bs.to_bytes(bs.pack_u32(idx, index_width(d))),
+        bs.to_bytes(bs.pack_u32(sign, 1)),
+        bs.to_bytes(bs.pack_u32(magbits, MAG_BITS[m])),
+    ]
+    return b"".join(parts)
+
+
+def decode_sparse(buf: bytes, offset: int, d: int) -> np.ndarray:
+    """Decode the payload at ``offset`` (past the common header) -> fp32 [d]."""
+    if len(buf) < offset + _PAYLOAD.size:
+        raise ValueError("truncated sparse wire message")
+    m, count = _PAYLOAD.unpack_from(buf, offset)
+    m = MagDType(m)
+    offset += _PAYLOAD.size
+    iw = index_width(d)
+    need = sum(4 * bs.n_words(count, w) for w in (iw, 1, MAG_BITS[m]))
+    if len(buf) < offset + need:
+        raise ValueError("truncated sparse wire message")
+    streams = []
+    for width, n in ((iw, count), (1, count), (MAG_BITS[m], count)):
+        nbytes = 4 * bs.n_words(n, width)
+        words = bs.from_bytes(buf[offset : offset + nbytes])
+        streams.append(bs.unpack_u32(words, width, n))
+        offset += nbytes
+    idx, sign, magbits = streams
+    if idx.size and int(idx.max()) >= d:
+        raise ValueError(f"corrupt sparse wire message: index {int(idx.max())} >= d={d}")
+    fdt, udt = _mag_np_dtype(m)
+    mags = magbits.astype({2: np.uint16, 4: np.uint32}[udt.itemsize]).view(fdt)
+    vals = mags.astype(np.float32)
+    vals = np.where(sign.astype(bool), -vals, vals)
+    out = np.zeros(d, dtype=np.float32)
+    out[idx] = vals
+    return out
+
+
+def encode_dense(x, *, mag="fp32") -> bytes:
+    """DENSE codec: raw values (full-sync broadcast rounds)."""
+    m = mag_dtype(mag)
+    v = np.ascontiguousarray(np.asarray(x), dtype=np.float32).reshape(-1)
+    fdt, udt = _mag_np_dtype(m)
+    bits = v.astype(fdt).view(udt).astype(np.uint32)
+    return b"".join(
+        [
+            pack_header(CodecID.DENSE, v.size),
+            struct.pack("<Bxxx", int(m)),
+            bs.to_bytes(bs.pack_u32(bits, MAG_BITS[m])),
+        ]
+    )
+
+
+def decode_dense(buf: bytes, offset: int, d: int) -> np.ndarray:
+    if len(buf) < offset + 4:
+        raise ValueError("truncated dense wire message")
+    (m,) = struct.unpack_from("<Bxxx", buf, offset)
+    m = MagDType(m)
+    offset += 4
+    if len(buf) < offset + 4 * bs.n_words(d, MAG_BITS[m]):
+        raise ValueError("truncated dense wire message")
+    words = bs.from_bytes(buf[offset : offset + 4 * bs.n_words(d, MAG_BITS[m])])
+    bits = bs.unpack_u32(words, MAG_BITS[m], d)
+    fdt, udt = _mag_np_dtype(m)
+    vals = bits.astype({2: np.uint16, 4: np.uint32}[udt.itemsize]).view(fdt)
+    return vals.astype(np.float32)

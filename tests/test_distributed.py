@@ -71,7 +71,9 @@ def test_spmd_equivalence_subprocess():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: the host-device count flag needs the cpu platform, and
+    # letting jax probe for a TPU burns ~90s of init timeouts per run
+    env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True, timeout=600
     )

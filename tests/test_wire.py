@@ -1,0 +1,277 @@
+"""repro.wire: codec round trips, layout cross-checks, measured-vs-analytic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import wire
+from repro.core import compressors as C
+from repro.core import ef21p, marina_p, problems, stepsizes
+from repro.kernels import ops, ref
+from repro.serve.engine import apply_wire_delta
+from repro.train.downlink import EF21PDownlink, MarinaPDownlink
+from repro.wire import bitstream as bs
+
+
+def _sparse_vec(d, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.zeros(d, np.float32)
+    if nnz:
+        idx = rng.choice(d, size=min(nnz, d), replace=False)
+        x[idx] = rng.standard_normal(idx.size).astype(np.float32)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# bitstream layer: host == jnp ref == Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [1, 7, 9, 10, 13, 16, 17, 31, 32])
+def test_bitstream_roundtrip_and_cross_impl(width):
+    rng = np.random.default_rng(width)
+    n = 777
+    vals = rng.integers(0, 2**width, n, dtype=np.uint64).astype(np.uint32)
+    host = bs.pack_u32(vals, width)
+    jref = np.asarray(ref.pack_bits_ref(jnp.asarray(vals), width))
+    dev = np.asarray(ops.pack_bits(jnp.asarray(vals), width=width))
+    np.testing.assert_array_equal(host, jref)
+    np.testing.assert_array_equal(host, dev)
+    np.testing.assert_array_equal(bs.unpack_u32(host, width, n), vals)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_bits_ref(jnp.asarray(host), width, n)), vals
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_bits(jnp.asarray(host), width=width, count=n)), vals
+    )
+
+
+def test_bitstream_empty():
+    assert bs.pack_u32(np.zeros(0, np.uint32), 9).size == 0
+    assert bs.unpack_u32(np.zeros(0, "<u4"), 9, 0).size == 0
+
+
+# ---------------------------------------------------------------------------
+# sparse codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,nnz", [(1000, 64), (1024, 1024), (7, 3), (129, 0), (1, 1)])
+def test_sparse_roundtrip_fp32_exact(d, nnz):
+    x = _sparse_vec(d, nnz, seed=d + nnz)
+    got = wire.decode(wire.encode_sparse(x))
+    np.testing.assert_array_equal(got, x)
+
+
+@pytest.mark.parametrize("mag", ["fp16", "bf16"])
+def test_sparse_roundtrip_reduced_mag(mag):
+    """Reduced-precision magnitudes round-trip exactly when the input is
+    already representable in the wire dtype."""
+    import ml_dtypes
+
+    dt = np.float16 if mag == "fp16" else np.dtype(ml_dtypes.bfloat16)
+    x = _sparse_vec(512, 100, seed=3).astype(dt).astype(np.float32)
+    got = wire.decode(wire.encode_sparse(x, mag=mag))
+    np.testing.assert_array_equal(got, x)
+    # and rounds (not corrupts) when it is not
+    y = _sparse_vec(512, 100, seed=4)
+    got = wire.decode(wire.encode_sparse(y, mag=mag))
+    np.testing.assert_array_equal(got != 0, y != 0)
+    np.testing.assert_allclose(got, y, rtol=2e-2 if mag == "bf16" else 1e-3)
+
+
+def test_sparse_roundtrip_compressor_outputs():
+    """decode(encode(q)) == q bit-for-bit for every sparse-family compressor."""
+    d = 600  # not divisible by the blocktopk block
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    for comp in (C.TopK(k=32), C.BlockTopK(k_per_block=8, block=128), C.RandK(k=50)):
+        q = np.asarray(comp(jax.random.PRNGKey(1), x), np.float32)
+        got = wire.decode(wire.encode(q, comp))
+        np.testing.assert_array_equal(got, q)
+        assert wire.peek(wire.encode(q, comp))[0] == wire.CodecID.SPARSE
+
+
+def test_dense_roundtrip():
+    x = np.random.default_rng(0).standard_normal(257).astype(np.float32)
+    np.testing.assert_array_equal(wire.decode(wire.encode_dense(x)), x)
+
+
+# ---------------------------------------------------------------------------
+# seed-only codec
+# ---------------------------------------------------------------------------
+
+
+def test_seed_bern_matches_counter_hash_kernel():
+    delta = np.random.default_rng(1).standard_normal(512).astype(np.float32)
+    msg = wire.SeedMessage(
+        family=wire.SeedFamily.BERN, seed=11, round=0, scale=1.0, n=4, worker=2,
+        param=0.25,
+    )
+    buf = wire.encode_seed(msg, 512)
+    assert len(buf) == wire.HEADER_BYTES + 28  # O(1) regardless of d
+    got = wire.decode(buf, delta=delta)
+    want = np.asarray(ref.bernk_ref(jnp.asarray(delta), keep_prob=0.25, seed=11, worker=2))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_seed_rotk_partition_identity():
+    d, n = 96, 4
+    delta = np.random.default_rng(2).standard_normal(d).astype(np.float32)
+    acc = np.zeros(d, np.float32)
+    for w in range(n):
+        msg = wire.SeedMessage(
+            family=wire.SeedFamily.ROTK, seed=0, round=0, scale=1.0, n=n, worker=w,
+            param=3.0,  # shared rotation
+        )
+        acc += wire.decode(wire.encode_seed(msg, d), delta=delta)
+    np.testing.assert_allclose(acc / n, delta, rtol=1e-6)
+
+
+def test_seed_perm_matches_compressor():
+    d, n = 64, 4
+    delta = np.random.default_rng(3).standard_normal(d).astype(np.float32)
+    for w in range(n):
+        msg = wire.SeedMessage(
+            family=wire.SeedFamily.PERM, seed=7, round=5, scale=1.0, n=n, worker=w
+        )
+        got = wire.decode(wire.encode_seed(msg, d), delta=delta)
+        key = jax.random.fold_in(jax.random.PRNGKey(7), 5)
+        want = np.asarray(C.PermK(n=n, worker=w)(key, jnp.asarray(delta)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_seed_requires_delta():
+    buf = wire.encode_seed(
+        wire.SeedMessage(wire.SeedFamily.BERN, 0, 0, 1.0, 1, 0, 0.5), 16
+    )
+    with pytest.raises(ValueError):
+        wire.decode(buf)
+
+
+# ---------------------------------------------------------------------------
+# natural codec
+# ---------------------------------------------------------------------------
+
+
+def test_natural_roundtrip_exact_on_compressor_output():
+    x = jax.random.normal(jax.random.PRNGKey(5), (777,))
+    q = np.asarray(C.NaturalCompression()(jax.random.PRNGKey(6), x), np.float32)
+    buf = wire.encode(q, C.NaturalCompression())
+    assert wire.peek(buf)[0] == wire.CodecID.NATURAL
+    np.testing.assert_array_equal(wire.decode(buf), q)
+    # 9 bits/value + fixed header, matching CommModel.natural_bits
+    from repro.core.comm_model import CommModel
+
+    overhead = 8 * len(buf) - CommModel(d=777).natural_bits()
+    assert 0 <= overhead <= 8 * wire.HEADER_BYTES + 32  # header + word padding
+
+
+# ---------------------------------------------------------------------------
+# measured vs analytic
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_measured_bits_match_comm_model():
+    from repro.core.comm_model import CommModel
+
+    d, nnz = 1024, 128
+    x = _sparse_vec(d, nnz, seed=9)
+    measured = 8 * len(wire.encode_sparse(x))
+    analytic = CommModel(d=d, value_bits=32).sparse_bits(nnz)
+    overhead = measured - analytic
+    assert 0 <= overhead <= 8 * (wire.HEADER_BYTES + 8) + 3 * 32  # headers + padding
+
+
+@pytest.mark.parametrize("mode", ["same", "ind", "perm"])
+def test_marina_run_wire_within_5pct(mode):
+    prob = problems.generate_problem(n=4, d=256, noise_scale=1.0, seed=0)
+    h = marina_p.run(
+        prob, mode=mode, k=64, p=0.25, stepsize=stepsizes.Constant(gamma=0.02),
+        T=30, measure_wire=True,
+    )
+    a, w = h["wire_model_ledger"].s2w_bits, h["wire_bits_total"]
+    assert abs(w - a) / a < 0.05, (mode, a, w)
+    # the budget-driving ledger keeps the paper's 64-bit model regardless
+    assert h["ledger"].model.value_bits == 64
+
+
+def test_ef21p_run_wire_overhead_bounded():
+    prob = problems.generate_problem(n=4, d=256, noise_scale=1.0, seed=0)
+    T = 20
+    h = ef21p.run(
+        prob, C.BlockTopK(k_per_block=16, block=128),
+        stepsizes.Constant(gamma=0.02), T=T, measure_wire=True,
+    )
+    a, w = h["wire_model_ledger"].s2w_bits, h["wire_bits_total"]
+    assert w >= a  # wire carries real headers
+    assert (w - a) / T <= 8 * (wire.HEADER_BYTES + 8) + 3 * 32  # fixed per-round overhead
+
+
+def test_downlink_measure_wire_matches_analytic():
+    tree_new = {"w": jnp.arange(0, 2048, dtype=jnp.float32).reshape(16, 128) / 999.0,
+                "b": jnp.linspace(-1, 1, 64)}
+    tree_old = jax.tree.map(lambda t: t * 0.95, tree_new)
+    for mode in ("perm", "ind", "same"):
+        dl = MarinaPDownlink(n_workers=4, mode=mode, p=1e-9)  # force compress branch
+        r = dl.measure_wire(jax.random.PRNGKey(0), tree_new, tree_old)
+        assert not r["full_sync"]
+        assert r["bits_seed"] < r["bits_mean"]  # O(1) vs O(q)
+        assert abs(r["bits_mean"] - r["bits_analytic"]) / r["bits_analytic"] < 0.25
+    dl = EF21PDownlink(n_workers=4, k_per_block=16, block=128)
+    r = dl.measure_wire(jax.random.PRNGKey(0), tree_new, tree_old)
+    assert r["bits_mean"] >= r["bits_analytic"]
+
+
+# ---------------------------------------------------------------------------
+# serve-side delta_sync
+# ---------------------------------------------------------------------------
+
+
+def test_apply_wire_delta_roundtrip():
+    params = {"w": jnp.ones((8, 16)), "b": jnp.zeros((24,))}
+    flat, _ = jax.flatten_util.ravel_pytree(params)
+    delta = _sparse_vec(flat.size, 20, seed=13)
+    new = apply_wire_delta(params, wire.encode_sparse(delta))
+    flat_new, _ = jax.flatten_util.ravel_pytree(new)
+    np.testing.assert_allclose(np.asarray(flat_new), np.asarray(flat) + delta, rtol=1e-6)
+    # shape guard
+    with pytest.raises(ValueError):
+        apply_wire_delta(params, wire.encode_sparse(np.zeros(7, np.float32)))
+    # SEED messages are rejected serving-side
+    buf = wire.encode_seed(
+        wire.SeedMessage(wire.SeedFamily.BERN, 0, 0, 1.0, 1, 0, 0.5), flat.size
+    )
+    with pytest.raises(ValueError):
+        apply_wire_delta(params, buf)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError):
+        wire.decode(b"\x00" * 16)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: wire.encode_sparse(_sparse_vec(100, 10)),
+    lambda: wire.encode_dense(np.ones(33, np.float32)),
+    lambda: wire.encode_natural(np.zeros(50, np.float32)),
+    lambda: wire.encode_seed(
+        wire.SeedMessage(wire.SeedFamily.BERN, 0, 0, 1.0, 2, 0, 0.5), 64
+    ),
+])
+def test_truncated_messages_rejected_cleanly(make):
+    buf = make()
+    for cut in (4, wire.HEADER_BYTES + 2, len(buf) - 1):
+        with pytest.raises(ValueError):
+            wire.decode(buf[:cut], delta=np.ones(64, np.float32))
+
+
+def test_corrupt_index_rejected():
+    """An index bit-flipped past d must raise ValueError, not IndexError."""
+    d = 100  # index_width(100)=7, so 127 is representable but out of range
+    x = np.zeros(d, np.float32)
+    x[5] = 1.0
+    buf = bytearray(wire.encode_sparse(x))
+    payload = wire.HEADER_BYTES + 8  # common header + sparse payload header
+    buf[payload] = 127  # first 7-bit index -> 127
+    with pytest.raises(ValueError, match="corrupt"):
+        wire.decode(bytes(buf))
