@@ -19,7 +19,7 @@ def rounds_to_eps(hist, eps):
     return None
 
 
-def bench():
+def bench(tracker=None):
     rows = []
     prob = problems.generate_problem(n=8, d=128, noise_scale=1.0, seed=0)
     eps = 0.05 * float(prob.f(prob.x0))

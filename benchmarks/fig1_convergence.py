@@ -62,11 +62,15 @@ def run_suite(*, d=200, n=10, noise=1.0, budget_bits=None, T=600, seed=0,
     return results
 
 
-def bench():
-    """CSV rows for benchmarks.run."""
+def bench(tracker=None):
+    """CSV rows for benchmarks.run (+ per-method bits/round telemetry)."""
     rows = []
     for n in (10, 50):
         res = run_suite(d=200, n=n, noise=1.0, T=400)
         for name, r in res.items():
             rows.append((f"fig1/n{n}/{name}", r["us_per_round"], r["final_subopt"]))
+            if tracker is not None:
+                tracker.log({f"fig1/n{n}/{name}": {
+                    "bits_per_round": r["bits_per_worker"] / r["rounds"],
+                    "rounds": r["rounds"]}})
     return rows

@@ -20,7 +20,7 @@ def _time(fn, *args, iters=3, **kw):
     return (time.time() - t0) / iters * 1e6
 
 
-def bench():
+def bench(tracker=None):
     rows = []
     d = 1 << 16
     x = jax.random.normal(jax.random.PRNGKey(0), (d,))

@@ -36,7 +36,7 @@ def markdown_table(recs):
     return hdr + "\n".join(lines)
 
 
-def bench(dirpath=DEFAULT_DIR):
+def bench(dirpath=DEFAULT_DIR, tracker=None):
     rows = []
     for r in load(dirpath):
         t = r["roofline"]

@@ -1,6 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Modules:
+Each suite streams ``(name, us_per_call, derived)`` rows through a
+composite tracker (repro.obs): stdout CSV (the historical format), an
+optional JSONL event log, and a schema-versioned ``BENCH_<suite>.json``
+perf artifact with provenance (git rev, jax version, device kind, seed)
+and regression gates for ``benchmarks/bench_diff.py``. Modules:
+
   fig1_convergence   Fig. 1/7   EF21-P vs MARINA-P (same/ind/perm), const/Polyak
   table2_sigma       Table 2    sigma_A per (n, noise scale), paper sizes
   stepsize_grid      Table 3/6  tuned Polyak factor grid
@@ -11,16 +16,41 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
 
 Select subsets: ``python -m benchmarks.run fig1 table2 ...`` (default: all
-except roofline_report when no dry-run records exist).
+except roofline_report when no dry-run records exist). A suite that raises
+prints its traceback, emits a ``<suite>/FAILED`` row, skips its BENCH
+artifact, and the run exits non-zero — CI cannot green-light a broken
+benchmark.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
+# Regression gates baked into each suite's BENCH artifact (self-describing
+# baselines — bench_diff reads them back). Timing tolerances are loose
+# (5x) because CI machines vary; deterministic deriveds are tight.
+_TIME = {"pattern": "*", "field": "us_per_call", "direction": "lower", "rtol": 4.0}
+GATES = {
+    "kernels": [_TIME],
+    "wire": [
+        _TIME,
+        # derived value = codec throughput in GB/s (higher is better)
+        {"pattern": "wire/*", "field": "value", "direction": "higher", "rtol": 0.9},
+    ],
+    "table2": [
+        # sigma_A is deterministic for a fixed seed/platform
+        {"pattern": "table2/*", "field": "value", "direction": "eq", "rtol": 0.05},
+    ],
+    "fig1": [_TIME],
+    "stepsize_grid": [_TIME],
+    "comm_complexity": [_TIME],
+    "roofline": [],
+}
 
-def main() -> None:
+
+def main(argv=None) -> int:
     from benchmarks import (
         comm_complexity,
         fig1_convergence,
@@ -30,6 +60,7 @@ def main() -> None:
         table2_sigma,
         wire_bench,
     )
+    from repro import obs
 
     suites = {
         "fig1": fig1_convergence.bench,
@@ -40,20 +71,49 @@ def main() -> None:
         "wire": wire_bench.bench,
         "roofline": roofline_report.bench,
     }
-    selected = [a for a in sys.argv[1:] if a in suites]
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("suites", nargs="*",
+                    help=f"subset of {sorted(suites)} (default: all with available inputs)")
+    ap.add_argument("--out", default=os.environ.get("REPRO_BENCH_DIR", "runs/bench"),
+                    help="directory for BENCH_<suite>.json artifacts")
+    ap.add_argument("--jsonl", default=None,
+                    help="also append every event to this JSONL log")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="recorded in BENCH env provenance")
+    args = ap.parse_args(argv)
+
+    unknown = [s for s in args.suites if s not in suites]
+    if unknown:
+        ap.error(f"unknown suites {unknown}; choose from {sorted(suites)}")
+    selected = list(args.suites)
     if not selected:
         selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels", "wire"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
+
+    jsonl = obs.JsonlTracker(args.jsonl) if args.jsonl else None
     print("name,us_per_call,derived")
+    failures = []
     for key in selected:
+        sink = obs.BenchJsonSink(key, args.out, seed=args.seed, gates=GATES.get(key, []))
+        tracker = obs.CompositeTracker(obs.CsvStdoutTracker(), sink, jsonl)
         try:
-            for name, us, derived in suites[key]():
-                print(f"{name},{us:.1f},{derived}")
-        except Exception:  # noqa: BLE001
+            with tracker.time_block(f"{key}/suite"):
+                rows = suites[key](tracker=tracker)
+            for name, us, derived in rows:
+                tracker.log_row(name, us, derived)
+            sink.finish()
+        except Exception:  # noqa: BLE001 - report, then fail the run
             traceback.print_exc()
             print(f"{key}/FAILED,0,nan")
+            failures.append(key)
+    if jsonl is not None:
+        jsonl.finish()
+    if failures:
+        print(f"FAILED suites: {','.join(failures)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

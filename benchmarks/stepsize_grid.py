@@ -33,7 +33,7 @@ def tune(method: str, prob, T=250, factors=None, seed=0):
     return best
 
 
-def bench():
+def bench(tracker=None):
     rows = []
     prob = problems.generate_problem(n=10, d=120, noise_scale=1.0, seed=0)
     for method in ("ef21p", "same", "ind", "perm"):

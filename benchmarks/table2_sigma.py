@@ -14,11 +14,15 @@ PAPER = {(10, 0.1): 0.09, (10, 1.0): 0.88, (10, 10.0): 5.60,
          (100, 0.1): 0.10, (100, 1.0): 0.83, (100, 10.0): 5.91}
 
 
-def bench(d=1000):
+def bench(d=1000, tracker=None):
     rows = []
     for (n, s), paper_val in PAPER.items():
         t0 = time.time()
         prob = problems.generate_problem(n=n, d=d, noise_scale=s, seed=0)
         dt = (time.time() - t0) * 1e6
         rows.append((f"table2/sigmaA/n{n}/s{s}", dt, prob.sigma_A))
+        if tracker is not None:
+            tracker.log({"table2": {f"n{n}/s{s}": {
+                "sigma_A": prob.sigma_A, "paper": paper_val,
+                "abs_err": abs(prob.sigma_A - paper_val)}}})
     return rows

@@ -93,8 +93,13 @@ def parity_rows(smoke: bool):
     return rows
 
 
-def bench():
-    """benchmarks.run harness adapter: (name, us_per_call, derived) rows."""
+def bench(tracker=None):
+    """benchmarks.run harness adapter: (name, us_per_call, derived) rows.
+
+    ``derived`` is the codec throughput in GB/s against the dense fp32
+    payload (numeric, so BENCH artifacts can gate on it). With a tracker,
+    also logs the smoke-size measured-vs-analytic parity per mode.
+    """
     d = 1 << 16
     rng = np.random.default_rng(0)
     dense = rng.standard_normal(d).astype(np.float32)
@@ -106,7 +111,13 @@ def bench():
         ("wire/dense_encode", lambda: wire.encode_dense(dense)),
     ):
         dt = _time(fn)
-        rows.append((name, dt * 1e6, f"{dense.nbytes / 1e9 / dt:.3f}GB/s"))
+        rows.append((name, dt * 1e6, round(dense.nbytes / 1e9 / dt, 3)))
+    if tracker is not None:
+        for name, analytic, measured, pct in parity_rows(smoke=True):
+            tracker.log({f"parity/{name}": {
+                "bits_per_round_analytic": analytic,
+                "bits_per_round_wire": measured,
+                "diff_pct": pct}})
     return rows
 
 

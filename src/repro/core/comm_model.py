@@ -36,7 +36,14 @@ class CommModel:
 
 @dataclasses.dataclass
 class CommLedger:
-    """Per-worker running totals of s2w and w2s traffic in bits."""
+    """Per-worker running totals of s2w and w2s traffic in bits.
+
+    s2w (downlink) is the compressed model broadcast the paper prices;
+    w2s (uplink) is the worker->server gradient. Both EF21-P and MARINA-P
+    send *exact* uplink gradients (Algorithms 1 & 2), so the uplink cost
+    is one dense message per round — tracked here so rounds-to-eps plots
+    can report total WAN traffic, not downlink only.
+    """
 
     model: CommModel
     s2w_bits: float = 0.0
@@ -48,6 +55,9 @@ class CommLedger:
 
     def log_s2w_dense(self):
         self.s2w_bits += self.model.dense_bits()
+
+    def log_w2s_sparse(self, q: float):
+        self.w2s_bits += self.model.sparse_bits(q)
 
     def log_w2s_dense(self):
         self.w2s_bits += self.model.dense_bits()

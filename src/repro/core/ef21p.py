@@ -91,6 +91,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    tracker=None,
 ):
     """Host loop driving the jitted round; returns history dict.
 
@@ -101,6 +102,11 @@ def run(
     matched to the wire magnitude dtype (hist["wire_model_ledger"] —
     DESIGN.md §3.5); the primary ledger keeps the paper's 64-bit model so
     ``bit_budget`` semantics do not change under measurement.
+
+    Uplink is exact (Algorithm 1), so the ledger also accrues one dense
+    w2s message per round (hist["w2s_bits"]). ``tracker`` (a
+    :class:`repro.obs.Tracker`) receives the recorded rounds as
+    step-indexed metric events.
     """
     assert T is not None or bit_budget is not None
     wire_model_ledger = None
@@ -117,7 +123,8 @@ def run(
     step = jax.jit(make_step(problem, comp, stepsize, return_delta=measure_wire))
     state = init(problem.x0)
     key = jax.random.PRNGKey(seed)
-    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": []}
+    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
+            "w2s_bits": []}
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
@@ -130,6 +137,7 @@ def run(
         key, sub = jax.random.split(key)
         state, m = step(state, sub)
         ledger.log_s2w_sparse(float(m["delta_nnz"]))
+        ledger.log_w2s_dense()  # uplink: exact subgradient every round
         ledger.tick()
         if measure_wire:
             wire_model_ledger.log_s2w_sparse(float(m["delta_nnz"]))
@@ -143,8 +151,20 @@ def run(
             hist["f_w"].append(float(m["f_w"]))
             hist["gamma"].append(float(m["gamma"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
+            hist["w2s_bits"].append(ledger.w2s_bits)
             if measure_wire:
                 hist["wire_bits"].append(wire_total)
+            if tracker is not None:
+                rec = {
+                    "ef21p/f_x": hist["f_x"][-1],
+                    "ef21p/f_w": hist["f_w"][-1],
+                    "ef21p/gamma": hist["gamma"][-1],
+                    "ef21p/s2w_bits": ledger.s2w_bits,
+                    "ef21p/w2s_bits": ledger.w2s_bits,
+                }
+                if measure_wire:
+                    rec["ef21p/wire_bits"] = wire_total
+                tracker.log(rec, step=t)
         t += 1
     hist["final_state"] = state
     hist["ledger"] = ledger

@@ -155,6 +155,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    tracker=None,
 ):
     """Host loop; stops on T rounds or per-worker downlink bit budget.
 
@@ -164,6 +165,11 @@ def run(
     magnitude dtype (hist["wire_model_ledger"] — DESIGN.md §3.5). The
     primary ledger keeps the paper's 64-bit model, so ``bit_budget``
     semantics are identical with and without measurement.
+
+    Uplink is exact (Algorithm 2: workers send raw subgradients), so the
+    ledger also accrues one dense w2s message per round
+    (hist["w2s_bits"]). ``tracker`` (a :class:`repro.obs.Tracker`)
+    receives the recorded rounds as step-indexed metric events.
     """
     assert T is not None or bit_budget is not None
     wire_model_ledger = None
@@ -180,7 +186,8 @@ def run(
     step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=measure_wire))
     state = init(problem.x0, problem.n)
     key = jax.random.PRNGKey(seed)
-    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [], "drift": []}
+    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
+            "w2s_bits": [], "drift": []}
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
@@ -197,6 +204,7 @@ def run(
             ledger.log_s2w_dense()
         else:
             ledger.log_s2w_sparse(float(m["q_nnz_mean"]))
+        ledger.log_w2s_dense()  # uplink: exact subgradient every round
         ledger.tick()
         if measure_wire:
             if full_sync:
@@ -224,8 +232,22 @@ def run(
             hist["gamma"].append(float(m["gamma"]))
             hist["drift"].append(float(m["drift"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
+            hist["w2s_bits"].append(ledger.w2s_bits)
             if measure_wire:
                 hist["wire_bits"].append(wire_total)
+            if tracker is not None:
+                rec = {
+                    "marina_p/f_x": hist["f_x"][-1],
+                    "marina_p/f_w": hist["f_w"][-1],
+                    "marina_p/gamma": hist["gamma"][-1],
+                    "marina_p/drift": hist["drift"][-1],
+                    "marina_p/s2w_bits": ledger.s2w_bits,
+                    "marina_p/w2s_bits": ledger.w2s_bits,
+                    "marina_p/full_sync": full_sync,
+                }
+                if measure_wire:
+                    rec["marina_p/wire_bits"] = wire_total
+                tracker.log(rec, step=t)
         t += 1
     hist["final_state"] = state
     hist["ledger"] = ledger

@@ -21,10 +21,12 @@ import traceback
 
 import jax
 
-from repro import configs
+from repro import configs, obs
 from repro.launch import hlo_cost, roofline
 from repro.launch.mesh import make_hierarchical_mesh, make_production_mesh
 from repro.launch.specs import SHAPES, build
+
+log = obs.get_logger("dryrun")
 
 
 def _mem_analysis_dict(compiled):
@@ -109,11 +111,24 @@ def run_one(arch: str, shape: str, *, multi_pod: bool = False, downlink: str = "
     }
     if verbose:
         dom = terms["dominant"].replace("_s", "")
-        print(
-            f"[dryrun] {arch:26s} {shape:12s} mesh={rec['mesh']:8s} "
+        log.info(
+            f"{arch:26s} {shape:12s} mesh={rec['mesh']:8s} "
             f"compile={t_compile:6.1f}s flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
             f"coll/dev={coll_dev:.3e} dominant={dom}"
         )
+    # structured twin of the log line: compile timings land in the same
+    # JSONL stream as benchmark events (REPRO_OBS_JSONL)
+    obs.default_tracker().log(
+        {
+            "dryrun": {
+                "arch": arch, "shape": shape, "mesh": rec["mesh"],
+                "t_lower_s": t_lower, "t_compile_s": t_compile,
+                "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+                "collective_total_per_device": coll_dev,
+                "dominant": terms["dominant"],
+            }
+        }
+    )
     if save_hlo:
         import gzip
 
@@ -150,7 +165,7 @@ def main():
                 tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
-                    print(f"[dryrun] skip (cached) {tag}")
+                    log.info(f"skip (cached) {tag}")
                     continue
                 try:
                     hlo_path = os.path.join(args.out, tag + ".hlo.gz") if args.save_hlo else None
@@ -165,11 +180,11 @@ def main():
                     traceback.print_exc()
                     failures.append((tag, repr(e)))
     if failures:
-        print(f"[dryrun] FAILURES ({len(failures)}):")
+        log.error(f"FAILURES ({len(failures)}):")
         for tag, err in failures:
-            print("  ", tag, err[:200])
+            log.error(f"  {tag} {err[:200]}")
         raise SystemExit(1)
-    print("[dryrun] all requested combinations lowered + compiled OK")
+    log.info("all requested combinations lowered + compiled OK")
 
 
 if __name__ == "__main__":

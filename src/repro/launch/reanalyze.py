@@ -10,7 +10,10 @@ import json
 import os
 import sys
 
+from repro import obs
 from repro.launch import hlo_cost, roofline
+
+log = obs.get_logger("reanalyze")
 
 
 def reanalyze(dirpath: str, out_dir: str | None = None):
@@ -34,8 +37,18 @@ def reanalyze(dirpath: str, out_dir: str | None = None):
         out = os.path.join(out_dir, os.path.basename(jf))
         json.dump(rec, open(out, "w"), indent=1)
         t = rec["roofline"]
-        print(f"{rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s} "
-              f"dom={t['dominant'][:4]} bound={t['bound_s']:.3e}")
+        log.info(f"{rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s} "
+                 f"dom={t['dominant'][:4]} bound={t['bound_s']:.3e}")
+        obs.default_tracker().log(
+            {
+                "reanalyze": {
+                    "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                    "flops_per_device": rec["flops_per_device"],
+                    "bytes_per_device": rec["bytes_per_device"],
+                    "bound_s": t["bound_s"], "dominant": t["dominant"],
+                }
+            }
+        )
 
 
 if __name__ == "__main__":

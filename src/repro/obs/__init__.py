@@ -1,0 +1,48 @@
+"""repro.obs — unified tracking, telemetry, and persistent perf artifacts.
+
+Three layers (DESIGN.md §7):
+
+* :mod:`~repro.obs.tracker` — the Tracker protocol and composable backends
+  (in-memory, JSONL event log, stdout CSV, composite fan-out);
+* :mod:`~repro.obs.bench_json` — the schema-versioned ``BENCH_<suite>.json``
+  sink, validator and provenance capture (git rev, jax version, device);
+* :mod:`~repro.obs.loggers` — the shared human logger + process-default
+  structured sink used by the launch CLIs.
+
+Regression gating against committed baselines lives in
+``benchmarks/bench_diff.py`` (it consumes the ``gates`` block these
+artifacts carry).
+"""
+from .bench_json import SCHEMA_VERSION, BenchJsonSink, environment, load, validate
+from .loggers import default_tracker, get_logger, reset_default_tracker
+from .tracker import (
+    CompositeTracker,
+    CsvStdoutTracker,
+    JsonlTracker,
+    MemoryTracker,
+    NullTracker,
+    Tracker,
+    events_equal,
+    flatten_metrics,
+    read_jsonl,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchJsonSink",
+    "CompositeTracker",
+    "CsvStdoutTracker",
+    "JsonlTracker",
+    "MemoryTracker",
+    "NullTracker",
+    "Tracker",
+    "default_tracker",
+    "environment",
+    "events_equal",
+    "flatten_metrics",
+    "get_logger",
+    "load",
+    "read_jsonl",
+    "reset_default_tracker",
+    "validate",
+]

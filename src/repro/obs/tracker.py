@@ -1,0 +1,226 @@
+"""Tracker protocol + composite backends (DESIGN.md §7).
+
+A tracker receives *events* — normalized dicts with a ``kind``:
+
+    metrics  {"kind": "metrics", "step": int|None, "wall_time": float,
+              "metrics": {flat_name: scalar|str}}
+    row      {"kind": "row", "name": str, "us_per_call": float,
+              "derived": scalar|str, "wall_time": float}
+    timer    {"kind": "timer", "name": str, "seconds": float,
+              "step": int|None, "wall_time": float}
+
+``log`` flattens nested dicts with "/" and coerces jax/numpy scalars to
+python floats, so every backend sees the same flat schema. ``row`` is the
+benchmark-harness shape (today's ``name,us_per_call,derived`` CSV line).
+``time_block`` is a ``block_until_ready``-correct host timer: the handle's
+``block(x)`` forces async dispatch before the clock stops, so jitted work
+is charged to the block that launched it.
+
+Backends compose: :class:`CompositeTracker` fans every event out, so one
+call site can feed the stdout CSV, a JSONL event log, and the
+``BENCH_*.json`` aggregator (bench_json.py) at once.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Any, Dict, IO, Iterable, List, Mapping, Optional
+
+
+def _scalar(v: Any) -> Any:
+    """Coerce 0-d jax/numpy values to python scalars; pass strings/bools through."""
+    if isinstance(v, (str, bool, int, float)) or v is None:
+        return v
+    for attr in ("item",):  # numpy scalars, 0-d arrays, jax arrays
+        fn = getattr(v, attr, None)
+        if callable(fn):
+            try:
+                return fn()
+            except (TypeError, ValueError):
+                break
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def flatten_metrics(d: Mapping[str, Any], *, sep: str = "/", prefix: str = "") -> Dict[str, Any]:
+    """Flatten nested dicts: {"a": {"b": 1}} -> {"a/b": 1}; scalars coerced."""
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        name = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_metrics(v, sep=sep, prefix=name))
+        else:
+            out[name] = _scalar(v)
+    return out
+
+
+class _TimerHandle:
+    """Yielded by ``time_block``; ``block(x)`` forces completion of jitted work."""
+
+    def __init__(self) -> None:
+        self.seconds: Optional[float] = None
+
+    def block(self, x: Any) -> Any:
+        import jax
+
+        return jax.block_until_ready(x)
+
+
+class Tracker:
+    """Base tracker: backends override :meth:`emit` (and maybe :meth:`finish`)."""
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def finish(self) -> None:
+        """Flush/close. Composite calls this once per run."""
+
+    # -- logging API ---------------------------------------------------------
+
+    def log(self, metrics: Mapping[str, Any], *, step: Optional[int] = None) -> None:
+        self.emit(
+            {
+                "kind": "metrics",
+                "step": None if step is None else int(step),
+                "wall_time": time.time(),
+                "metrics": flatten_metrics(metrics),
+            }
+        )
+
+    def log_row(self, name: str, us_per_call: float, derived: Any) -> None:
+        """One benchmark row — today's ``name,us_per_call,derived`` CSV line."""
+        self.emit(
+            {
+                "kind": "row",
+                "name": str(name),
+                "us_per_call": float(us_per_call),
+                "derived": _scalar(derived),
+                "wall_time": time.time(),
+            }
+        )
+
+    @contextlib.contextmanager
+    def time_block(self, name: str, *, step: Optional[int] = None):
+        """Host timer; call ``handle.block(out)`` on jax outputs inside the block."""
+        handle = _TimerHandle()
+        t0 = time.perf_counter()
+        try:
+            yield handle
+        finally:
+            handle.seconds = time.perf_counter() - t0
+            self.emit(
+                {
+                    "kind": "timer",
+                    "name": str(name),
+                    "seconds": handle.seconds,
+                    "step": None if step is None else int(step),
+                    "wall_time": time.time(),
+                }
+            )
+
+    @contextlib.contextmanager
+    def profile(self, name: str, trace_dir: Optional[str] = None):
+        """jax.profiler trace around a block; no-op unless a trace dir is
+        given (or REPRO_OBS_TRACE_DIR is set)."""
+        trace_dir = trace_dir or os.environ.get("REPRO_OBS_TRACE_DIR")
+        if not trace_dir:
+            yield
+            return
+        import jax
+
+        with jax.profiler.trace(os.path.join(trace_dir, name)):
+            yield
+
+
+class NullTracker(Tracker):
+    def emit(self, event: Dict[str, Any]) -> None:
+        pass
+
+
+class MemoryTracker(Tracker):
+    """In-memory event list — the test/inspection backend."""
+
+    def __init__(self) -> None:
+        self.events: List[Dict[str, Any]] = []
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self.events.append(event)
+
+
+class JsonlTracker(Tracker):
+    """Append-only JSONL event log (one event per line)."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._fh: Optional[IO[str]] = open(path, "a")
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        assert self._fh is not None, "JsonlTracker already finished"
+        json.dump(event, self._fh, default=str)
+        self._fh.write("\n")
+        self._fh.flush()
+
+    def finish(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+class CsvStdoutTracker(Tracker):
+    """Prints ``row`` events in the harness's ``name,us_per_call,derived``
+    CSV format (other event kinds are ignored)."""
+
+    def __init__(self, stream: Optional[IO[str]] = None, *, header: bool = False) -> None:
+        import sys
+
+        self.stream = stream if stream is not None else sys.stdout
+        if header:
+            print("name,us_per_call,derived", file=self.stream)
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        if event.get("kind") != "row":
+            return
+        print(
+            f"{event['name']},{event['us_per_call']:.1f},{event['derived']}",
+            file=self.stream,
+        )
+
+
+class CompositeTracker(Tracker):
+    """Fan every event out to child backends."""
+
+    def __init__(self, *trackers: Tracker) -> None:
+        self.trackers: List[Tracker] = [t for t in trackers if t is not None]
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        for t in self.trackers:
+            t.emit(event)
+
+    def finish(self) -> None:
+        for t in self.trackers:
+            t.finish()
+
+
+def events_equal(a: Iterable[Mapping[str, Any]], b: Iterable[Mapping[str, Any]]) -> bool:
+    """Compare event streams ignoring wall-clock and timer jitter."""
+
+    def norm(events):
+        out = []
+        for e in events:
+            e = {k: v for k, v in e.items() if k not in ("wall_time", "seconds")}
+            out.append(json.loads(json.dumps(e, default=str)))
+        return out
+
+    return norm(a) == norm(b)

@@ -63,6 +63,7 @@ class DecodeEngine:
     batch_size: int
     window_override: Optional[int] = None
     sample_fn: Callable = greedy_sample
+    tracker: Optional[object] = None  # repro.obs.Tracker: request latency telemetry
 
     def __post_init__(self):
         cfg = self.cfg
@@ -116,11 +117,37 @@ class DecodeEngine:
         self.params = apply_wire_delta(self.params, buf)
 
     def run(self, prompts: jax.Array, n_new_tokens: int, seed: int = 0):
-        """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n]."""
+        """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n].
+
+        With a ``tracker`` attached, each request logs prefill/decode
+        latency ("serve/prefill", "serve/decode" timer events — BENCH
+        aggregation turns repeats into p50/p99) plus a tokens/s metric.
+        """
+        from repro import obs
+
+        tracker = self.tracker or obs.NullTracker()
         caches = self.fresh_caches()
-        caches, last_logits = self._prefill(self.params, caches, prompts)
+        with tracker.time_block("serve/prefill") as tb:
+            caches, last_logits = self._prefill(self.params, caches, prompts)
+            tb.block(last_logits)
+        prefill_s = tb.seconds
         start = prompts.shape[-1]
-        _, _, toks = self._generate(
-            self.params, caches, last_logits, start, jax.random.PRNGKey(seed), n_new_tokens
+        with tracker.time_block("serve/decode") as tb:
+            _, _, toks = self._generate(
+                self.params, caches, last_logits, start, jax.random.PRNGKey(seed), n_new_tokens
+            )
+            tb.block(toks)
+        decode_s = tb.seconds
+        total = prefill_s + decode_s
+        tracker.log(
+            {
+                "serve/request_s": total,
+                "serve/tokens_per_s": (
+                    prompts.shape[0] * n_new_tokens / decode_s if decode_s > 0 else 0.0
+                ),
+                "serve/batch": prompts.shape[0],
+                "serve/prompt_len": prompts.shape[-1],
+                "serve/new_tokens": n_new_tokens,
+            }
         )
         return toks

@@ -48,6 +48,25 @@ def tree_size(tree) -> int:
     return sum(math.prod(l.shape) if l.shape else 1 for l in jax.tree.leaves(tree))
 
 
+def _track_wire(tracker, step, res: dict) -> dict:
+    """Log a measure_wire result as downlink/* metrics; returns ``res``."""
+    if tracker is not None:
+        tracker.log(
+            {
+                "downlink/wire_bits_mean": res["bits_mean"],
+                "downlink/wire_bits_analytic": res["bits_analytic"],
+                "downlink/full_sync": res["full_sync"],
+                **(
+                    {"downlink/wire_bits_seed": res["bits_seed"]}
+                    if "bits_seed" in res
+                    else {}
+                ),
+            },
+            step=step,
+        )
+    return res
+
+
 @dataclasses.dataclass(frozen=True)
 class MarinaPDownlink:
     """Compressed server->worker model broadcast (Algorithm 2, pytree form)."""
@@ -140,7 +159,8 @@ class MarinaPDownlink:
         )
         return sum(jax.tree.leaves(sq)) / self.n_workers
 
-    def measure_wire(self, key, server_new, server_old, *, mag="fp32") -> dict:
+    def measure_wire(self, key, server_new, server_old, *, mag="fp32",
+                     tracker=None, step=None) -> dict:
         """Host-side wire measurement (measure_wire=True path).
 
         Replays this round's randomness exactly as :meth:`round` consumes it,
@@ -149,6 +169,7 @@ class MarinaPDownlink:
         analytic model's prediction (value_bits matched to ``mag``) and the
         O(1) seed-only alternative (DESIGN.md §3.5). Not jittable — this is
         the accounting/verification path, not the training hot path.
+        ``tracker`` logs the result as a ``downlink/*`` metric event.
         """
         import jax.flatten_util  # noqa: F401  (registers jax.flatten_util)
         import numpy as np
@@ -179,9 +200,10 @@ class MarinaPDownlink:
                 )[0]
             )
             bits = float(wire.measured_bits(wire.encode_dense(flat, mag=mag)))
-            return {"full_sync": True, "bits_mean": bits, "bits_per_worker": [bits] * n,
-                    "bits_seed": float(wire.measured_bits(seed_buf)),
-                    "bits_analytic": cm.dense_bits()}
+            return _track_wire(tracker, step, {
+                "full_sync": True, "bits_mean": bits, "bits_per_worker": [bits] * n,
+                "bits_seed": float(wire.measured_bits(seed_buf)),
+                "bits_analytic": cm.dense_bits()})
         leaves_new, _ = jax.tree.flatten(server_new)
         leaves_old = jax.tree.leaves(server_old)
         per_worker = []
@@ -205,13 +227,13 @@ class MarinaPDownlink:
             per_worker.append(float(wire.measured_bits(buf)))
         if self.mode == "same":
             per_worker = per_worker * n
-        return {
+        return _track_wire(tracker, step, {
             "full_sync": False,
             "bits_mean": sum(per_worker) / n,
             "bits_per_worker": per_worker,
             "bits_seed": float(wire.measured_bits(seed_buf)),
             "bits_analytic": cm.sparse_bits(self.frac * d),
-        }
+        })
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,7 +267,8 @@ class EF21PDownlink:
     def init_workers(self, server_params):
         return self.init_shift(server_params)
 
-    def measure_wire(self, key, server_new, shift, *, mag="fp32") -> dict:
+    def measure_wire(self, key, server_new, shift, *, mag="fp32",
+                     tracker=None, step=None) -> dict:
         """Host-side wire measurement of one EF21-P broadcast (the block-TopK
         compressed difference, identical for every worker)."""
         import numpy as np
@@ -263,12 +286,12 @@ class EF21PDownlink:
         ]
         buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
         frac = self.k_per_block / self.block
-        return {
+        return _track_wire(tracker, step, {
             "full_sync": False,
             "bits_mean": float(wire.measured_bits(buf)),
             "bits_per_worker": [float(wire.measured_bits(buf))] * self.n_workers,
             "bits_analytic": cm.sparse_bits(frac * d),
-        }
+        })
 
     def worker_drift(self, server_params, shift) -> Array:
         sq = jax.tree.map(

@@ -20,10 +20,11 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.comm_model import CommModel
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer
-from .downlink import EF21PDownlink, MarinaPDownlink
+from .downlink import EF21PDownlink, MarinaPDownlink, tree_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,7 @@ def init_state(cfg: ModelConfig, tcfg: TrainerConfig, downlink, optimizer: Optim
         "opt": optimizer.init(server),
         "step": jnp.zeros((), jnp.int32),
         "bits_per_worker": jnp.zeros((), jnp.float32),
+        "uplink_bits_per_worker": jnp.zeros((), jnp.float32),
     }
     if downlink is not None:
         workers = downlink.init_workers(server)
@@ -97,13 +99,18 @@ def make_train_step(
         else:
             lr = lr_fn(state["step"])
         server_new, opt_new = optimizer.update(grads, state["opt"], server, lr)
+        # ---- uplink: exact dense gradient per worker (w2s, ROADMAP gap) ------
+        d = tree_size(server)
+        uplink_bits = state["uplink_bits_per_worker"] + CommModel(d=d).dense_bits()
         new_state = {
             "server": server_new,
             "opt": opt_new,
             "step": state["step"] + 1,
             "bits_per_worker": state["bits_per_worker"],
+            "uplink_bits_per_worker": uplink_bits,
         }
-        metrics = {"loss": loss, "grad_norm": jnp.sqrt(gnorm_sq), "lr": lr}
+        metrics = {"loss": loss, "grad_norm": jnp.sqrt(gnorm_sq), "lr": lr,
+                   "uplink_bits_per_worker": uplink_bits}
         # ---- downlink: compressed broadcast ----------------------------------
         if downlink is None:
             pass
@@ -121,3 +128,40 @@ def make_train_step(
         return new_state, metrics
 
     return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    tcfg: TrainerConfig,
+    downlink,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    data,
+    *,
+    steps: int,
+    key,
+    tracker=None,
+    log_every: int = 1,
+):
+    """Host loop around the jitted step with per-step telemetry.
+
+    Each step is timed with a ``block_until_ready``-correct host timer
+    ("train/step") and its metrics (loss, grad_norm, lr, drift,
+    bits_per_worker, uplink_bits_per_worker) are logged to ``tracker``
+    at ``log_every`` cadence. Returns (final_state, last_metrics).
+    """
+    from repro import obs
+
+    tracker = tracker or obs.NullTracker()
+    k_init, k_steps = jax.random.split(key)
+    state = init_state(cfg, tcfg, downlink, optimizer, k_init)
+    step = jax.jit(make_train_step(cfg, tcfg, downlink, optimizer, lr_fn))
+    m = {}
+    for i in range(steps):
+        batch = data.batch(i)
+        with tracker.time_block("train/step", step=i) as tb:
+            state, m = step(state, batch, jax.random.fold_in(k_steps, i))
+            tb.block(m)
+        if i % log_every == 0:
+            tracker.log({"train": m}, step=i)
+    return state, m

@@ -1,0 +1,280 @@
+"""repro.obs: tracker backends, BENCH_*.json schema, bench_diff gating."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.obs.bench_json import BenchJsonSink
+
+from benchmarks import bench_diff
+
+
+# -- tracker backends --------------------------------------------------------
+
+
+def _drive(tracker):
+    tracker.log({"loss": jnp.float32(2.5), "nested": {"a": 1, "b": {"c": 2}}}, step=0)
+    tracker.log_row("suite/metric", 12.5, 0.75)
+    with tracker.time_block("blk", step=1) as tb:
+        tb.block(jnp.ones(()) * 2)
+
+
+def test_memory_vs_jsonl_equivalence(tmp_path):
+    mem = obs.MemoryTracker()
+    path = os.path.join(tmp_path, "events.jsonl")
+    jl = obs.JsonlTracker(path)
+    _drive(obs.CompositeTracker(mem, jl))
+    jl.finish()
+    replayed = obs.read_jsonl(path)
+    assert len(replayed) == len(mem.events) == 3
+    assert obs.events_equal(mem.events, replayed)
+
+
+def test_nested_dict_flattening():
+    flat = obs.flatten_metrics({"a": {"b": 1, "c": {"d": 2.5}}, "e": "s", "f": 3})
+    assert flat == {"a/b": 1, "a/c/d": 2.5, "e": "s", "f": 3}
+    # jax/numpy scalars coerce to python scalars
+    flat = obs.flatten_metrics({"x": jnp.float32(1.5), "y": jnp.int32(2)})
+    assert flat == {"x": 1.5, "y": 2} and isinstance(flat["x"], float)
+
+
+def test_timer_monotonic_under_jit():
+    """block_until_ready-correct timers: positive durations, nondecreasing
+    wall clock, and the blocked jitted work is charged to its block."""
+    mem = obs.MemoryTracker()
+    f = jax.jit(lambda x: (x @ x).sum())
+    x = jnp.ones((128, 128))
+    for i in range(3):
+        with mem.time_block("mm", step=i) as tb:
+            tb.block(f(x))
+    timers = [e for e in mem.events if e["kind"] == "timer"]
+    assert len(timers) == 3
+    assert all(t["seconds"] > 0 for t in timers)
+    walls = [t["wall_time"] for t in timers]
+    assert walls == sorted(walls)
+    assert [t["step"] for t in timers] == [0, 1, 2]
+
+
+def test_csv_stdout_format(capsys):
+    t = obs.CsvStdoutTracker(header=True)
+    t.log_row("a/b", 12.34, "0.5GB/s")
+    t.log({"ignored": 1})  # non-row events don't print
+    out = capsys.readouterr().out.splitlines()
+    assert out == ["name,us_per_call,derived", "a/b,12.3,0.5GB/s"]
+
+
+# -- BENCH_*.json schema -----------------------------------------------------
+
+
+def _make_doc(tmp_path, gates=None, rows=(("s/m", 10.0, 2.0),)):
+    sink = BenchJsonSink("t1", str(tmp_path), seed=0, gates=gates or [])
+    for name, us, derived in rows:
+        sink.log_row(name, us, derived)
+    with sink.time_block("t1/block"):
+        pass
+    sink.finish()
+    return sink.path
+
+
+def test_bench_json_schema_roundtrip(tmp_path):
+    path = _make_doc(
+        tmp_path,
+        gates=[{"pattern": "s/*", "field": "value", "direction": "eq", "rtol": 0.1}],
+    )
+    doc = obs.load(path)
+    assert obs.validate(doc) == []
+    assert doc["schema_version"] == obs.SCHEMA_VERSION
+    assert doc["suite"] == "t1"
+    assert doc["metrics"]["s/m"] == {"count": 1, "us_per_call": 10.0, "value": 2.0}
+    assert doc["timers"]["t1/block"]["n"] == 1
+    for k in ("git_rev", "jax_version", "device_kind", "platform", "seed"):
+        assert k in doc["env"]
+    # round-trip: re-serialize identically
+    assert json.loads(json.dumps(doc)) == doc
+
+
+def test_bench_json_percentiles(tmp_path):
+    sink = BenchJsonSink("pct", str(tmp_path), seed=0)
+    for v in range(100):
+        sink.log({"lat": float(v)})
+    doc = sink.document()
+    entry = doc["metrics"]["lat"]
+    assert entry["count"] == 100 and entry["value"] == 99.0  # last wins
+    assert entry["p50"] == pytest.approx(50.0, abs=1.0)
+    assert entry["p99"] == pytest.approx(99.0, abs=1.0)
+
+
+def test_bench_json_validate_catches_violations():
+    assert obs.validate({}) != []
+    doc = {
+        "schema_version": obs.SCHEMA_VERSION, "suite": "x", "created_unix": 0.0,
+        "env": {"git_rev": None, "jax_version": None, "device_kind": None,
+                "platform": None, "seed": 0},
+        "metrics": {"m": {"count": 0}},  # count < 1
+        "timers": {}, "gates": [{"pattern": "m"}],  # incomplete gate
+    }
+    errors = obs.validate(doc)
+    assert any("count" in e for e in errors)
+    assert any("gates[0]" in e for e in errors)
+
+
+# -- bench_diff regression gating --------------------------------------------
+
+
+def _doc(metrics, gates):
+    return {
+        "schema_version": obs.SCHEMA_VERSION, "suite": "s", "created_unix": 0.0,
+        "env": {"git_rev": None, "jax_version": None, "device_kind": None,
+                "platform": None, "seed": 0},
+        "metrics": metrics, "timers": {}, "gates": gates,
+    }
+
+
+GATE_LOWER = [{"pattern": "m/*", "field": "us_per_call", "direction": "lower", "rtol": 0.5}]
+
+
+def test_bench_diff_within_tolerance_passes():
+    base = _doc({"m/a": {"count": 1, "us_per_call": 100.0}}, GATE_LOWER)
+    fresh = _doc({"m/a": {"count": 1, "us_per_call": 120.0}}, GATE_LOWER)
+    failures, checked = bench_diff.diff_docs(base, fresh)
+    assert failures == [] and checked == ["m/a:us_per_call"]
+
+
+def test_bench_diff_tolerance_boundary():
+    base = _doc({"m/a": {"count": 1, "us_per_call": 100.0}}, GATE_LOWER)
+    at = _doc({"m/a": {"count": 1, "us_per_call": 150.0}}, GATE_LOWER)
+    over = _doc({"m/a": {"count": 1, "us_per_call": 150.0001}}, GATE_LOWER)
+    assert bench_diff.diff_docs(base, at)[0] == []  # exactly at threshold passes
+    assert bench_diff.diff_docs(base, over)[0] != []
+
+
+def test_bench_diff_directions():
+    g_hi = [{"pattern": "m", "field": "value", "direction": "higher", "rtol": 0.2}]
+    base = _doc({"m": {"count": 1, "value": 1.0}}, g_hi)
+    assert bench_diff.diff_docs(base, _doc({"m": {"count": 1, "value": 0.85}}, g_hi))[0] == []
+    assert bench_diff.diff_docs(base, _doc({"m": {"count": 1, "value": 0.75}}, g_hi))[0] != []
+    g_eq = [{"pattern": "m", "field": "value", "direction": "eq", "rtol": 0.1}]
+    base = _doc({"m": {"count": 1, "value": 2.0}}, g_eq)
+    assert bench_diff.diff_docs(base, _doc({"m": {"count": 1, "value": 2.19}}, g_eq))[0] == []
+    assert bench_diff.diff_docs(base, _doc({"m": {"count": 1, "value": 2.21}}, g_eq))[0] != []
+
+
+def test_bench_diff_missing_metric_fails():
+    base = _doc({"m/a": {"count": 1, "us_per_call": 100.0}}, GATE_LOWER)
+    fresh = _doc({}, GATE_LOWER)
+    failures, _ = bench_diff.diff_docs(base, fresh)
+    assert failures and "missing" in failures[0]
+
+
+def test_bench_diff_dirs_missing_baseline(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    base_dir.mkdir(), fresh_dir.mkdir()
+    with open(fresh_dir / "BENCH_s.json", "w") as fh:
+        json.dump(_doc({}, []), fh)
+    failures, _ = bench_diff.diff_dirs(str(base_dir), str(fresh_dir))
+    assert failures and "no committed baseline" in failures[0]
+    failures, report = bench_diff.diff_dirs(
+        str(base_dir), str(fresh_dir), ignore_missing=True
+    )
+    assert failures == [] and any("ignored" in r for r in report)
+
+
+def test_bench_diff_missing_fresh_fails(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    base_dir.mkdir(), fresh_dir.mkdir()
+    with open(base_dir / "BENCH_s.json", "w") as fh:
+        json.dump(_doc({}, []), fh)
+    failures, _ = bench_diff.diff_dirs(str(base_dir), str(fresh_dir))
+    assert failures and "fresh" in failures[0]
+
+
+def test_bench_diff_cli_exit_codes(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    base_dir.mkdir(), fresh_dir.mkdir()
+    doc = _doc({"m/a": {"count": 1, "us_per_call": 100.0}}, GATE_LOWER)
+    for d in (base_dir, fresh_dir):
+        with open(d / "BENCH_s.json", "w") as fh:
+            json.dump(doc, fh)
+    assert bench_diff.main(["--baseline", str(base_dir), "--fresh", str(fresh_dir)]) == 0
+    bad = _doc({"m/a": {"count": 1, "us_per_call": 1000.0}}, GATE_LOWER)
+    with open(fresh_dir / "BENCH_s.json", "w") as fh:
+        json.dump(bad, fh)
+    assert bench_diff.main(["--baseline", str(base_dir), "--fresh", str(fresh_dir)]) == 1
+
+
+# -- benchmarks.run harness --------------------------------------------------
+
+
+def test_run_propagates_suite_failure(tmp_path, monkeypatch, capsys):
+    """A raising suite must fail the run (no more FAILED,0,nan + exit 0)."""
+    from benchmarks import run as bench_run
+    from benchmarks import table2_sigma
+
+    def boom(tracker=None):
+        raise RuntimeError("suite exploded")
+
+    monkeypatch.setattr(table2_sigma, "bench", boom)
+    rc = bench_run.main(["table2", "--out", str(tmp_path)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "table2/FAILED,0,nan" in out  # per-suite row preserved
+    assert not os.path.exists(os.path.join(tmp_path, "BENCH_table2.json"))
+
+
+def test_run_writes_schema_valid_artifact(tmp_path, monkeypatch):
+    from benchmarks import run as bench_run
+    from benchmarks import table2_sigma
+
+    monkeypatch.setattr(
+        table2_sigma, "bench", lambda tracker=None: [("table2/x", 5.0, 1.25)]
+    )
+    rc = bench_run.main(["table2", "--out", str(tmp_path)])
+    assert rc == 0
+    doc = obs.load(os.path.join(tmp_path, "BENCH_table2.json"))
+    assert obs.validate(doc) == []
+    assert doc["metrics"]["table2/x"]["value"] == 1.25
+    assert doc["gates"], "table2 artifact must carry regression gates"
+
+
+# -- integration: algorithms + trainer telemetry -----------------------------
+
+
+def test_marina_run_tracker_and_w2s_bits():
+    from repro.core import marina_p, problems, stepsizes
+
+    prob = problems.generate_problem(n=4, d=64, noise_scale=1.0, seed=0)
+    tr = obs.MemoryTracker()
+    h = marina_p.run(prob, mode="perm", k=16, p=0.25,
+                     stepsize=stepsizes.Constant(0.02), T=8, tracker=tr)
+    # uplink: one exact dense message (64 bits/coord) per round per worker
+    assert h["w2s_bits"][-1] == pytest.approx(8 * 64 * prob.d)
+    events = [e for e in tr.events if e["kind"] == "metrics"]
+    assert len(events) == 8
+    assert events[-1]["metrics"]["marina_p/w2s_bits"] == h["w2s_bits"][-1]
+    assert "marina_p/s2w_bits" in events[0]["metrics"]
+
+
+def test_ef21p_run_tracker_and_w2s_bits():
+    from repro.core import compressors as C
+    from repro.core import ef21p, problems, stepsizes
+
+    prob = problems.generate_problem(n=4, d=64, noise_scale=1.0, seed=0)
+    tr = obs.MemoryTracker()
+    h = ef21p.run(prob, C.TopK(k=8), stepsizes.Constant(0.02), T=5, tracker=tr)
+    assert h["w2s_bits"][-1] == pytest.approx(5 * 64 * prob.d)
+    assert len([e for e in tr.events if e["kind"] == "metrics"]) == 5
+
+
+def test_default_tracker_jsonl_env(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "stream.jsonl")
+    monkeypatch.setenv("REPRO_OBS_JSONL", path)
+    obs.reset_default_tracker()
+    obs.default_tracker().log({"dryrun": {"t_compile_s": 1.5}})
+    obs.reset_default_tracker()
+    events = obs.read_jsonl(path)
+    assert events[0]["metrics"] == {"dryrun/t_compile_s": 1.5}
+    monkeypatch.delenv("REPRO_OBS_JSONL")
+    obs.reset_default_tracker()

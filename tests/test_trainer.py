@@ -146,6 +146,55 @@ def test_serve_engine_greedy_deterministic(small):
     assert t1.shape == (2, 6)
 
 
+def test_serve_engine_latency_telemetry(small):
+    """Each request logs prefill/decode timers + a tokens/s metric."""
+    from repro import obs
+
+    cfg, _ = small
+    params = lm.lm_init(cfg, jax.random.PRNGKey(0))
+    tr = obs.MemoryTracker()
+    eng = DecodeEngine(cfg, params, cache_len=64, batch_size=2, tracker=tr)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    eng.run(prompts, n_new_tokens=4)
+    eng.run(prompts, n_new_tokens=4)
+    timers = [e["name"] for e in tr.events if e["kind"] == "timer"]
+    assert timers == ["serve/prefill", "serve/decode"] * 2
+    mets = [e for e in tr.events if e["kind"] == "metrics"]
+    assert len(mets) == 2
+    assert mets[0]["metrics"]["serve/tokens_per_s"] > 0
+    assert mets[0]["metrics"]["serve/batch"] == 2
+
+
+def test_train_loop_tracker_and_uplink_bits(small):
+    """train_loop logs step timers + metrics; uplink accrues dense bits/step."""
+    import math
+
+    from repro import obs
+    from repro.data import SyntheticLMData
+    from repro.optim import make_optimizer
+    from repro.train import train_loop
+
+    cfg, tcfg = small
+    dl = make_downlink("marina:perm", tcfg.n_workers)
+    tr = obs.MemoryTracker()
+    data = SyntheticLMData(cfg, tcfg.n_workers, 2, 64)
+    state, m = train_loop(
+        cfg, tcfg, dl, make_optimizer("adamw"), constant_lr(2e-3), data,
+        steps=3, key=jax.random.PRNGKey(0), tracker=tr,
+    )
+    timers = [e for e in tr.events if e["kind"] == "timer"]
+    assert [t["name"] for t in timers] == ["train/step"] * 3
+    assert all(t["seconds"] > 0 for t in timers)
+    mets = [e for e in tr.events if e["kind"] == "metrics"]
+    d = tree_size(state["server"])
+    # uplink = one exact dense (64-bit model) gradient per worker per step
+    assert float(m["uplink_bits_per_worker"]) == pytest.approx(3 * 64.0 * d, rel=1e-6)
+    assert mets[-1]["metrics"]["train/uplink_bits_per_worker"] == pytest.approx(
+        float(m["uplink_bits_per_worker"]), rel=1e-6
+    )
+    assert "train/loss" in mets[0]["metrics"]
+
+
 def test_lr_schedules():
     sch = cosine_warmup(1.0, warmup=10, total=100)
     assert float(sch(jnp.int32(0))) == 0.0
