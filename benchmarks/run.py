@@ -13,6 +13,8 @@ and regression gates for ``benchmarks/bench_diff.py``. Modules:
   kernel_bench       —          Pallas kernel (interpret) microbenchmarks
   wire_bench         DESIGN §3  wire codec throughput (also a standalone CLI
                                 with measured-vs-analytic parity checks)
+  transport_bench    DESIGN §8  frame/CRC throughput + clean-vs-degraded
+                                MARINA-P chaos run (goodput, rounds_ratio)
   roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
 
 Select subsets: ``python -m benchmarks.run fig1 table2 ...`` (default: all
@@ -47,6 +49,13 @@ GATES = {
     "stepsize_grid": [_TIME],
     "comm_complexity": [_TIME],
     "roofline": [],
+    "transport": [
+        _TIME,
+        # chaos-run quality: payload bytes delivered / wire bytes sent
+        {"pattern": "transport/goodput", "field": "value", "direction": "higher", "rtol": 0.3},
+        # degraded rounds-to-target / clean rounds-to-target
+        {"pattern": "transport/rounds_ratio", "field": "value", "direction": "lower", "rtol": 0.5},
+    ],
 }
 
 
@@ -58,6 +67,7 @@ def main(argv=None) -> int:
         roofline_report,
         stepsize_grid,
         table2_sigma,
+        transport_bench,
         wire_bench,
     )
     from repro import obs
@@ -70,6 +80,7 @@ def main(argv=None) -> int:
         "kernels": kernel_bench.bench,
         "wire": wire_bench.bench,
         "roofline": roofline_report.bench,
+        "transport": transport_bench.bench,
     }
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("suites", nargs="*",
@@ -87,7 +98,8 @@ def main(argv=None) -> int:
         ap.error(f"unknown suites {unknown}; choose from {sorted(suites)}")
     selected = list(args.suites)
     if not selected:
-        selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels", "wire"]
+        selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels",
+                    "wire", "transport"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
 

@@ -1,0 +1,106 @@
+"""Transport benchmark: framing cost + degraded-mode training overhead.
+
+Two sections (DESIGN.md §8.6):
+
+* **framing** — frame encode/decode and CRC32C throughput (the per-message
+  host cost the transport adds on top of the wire codecs);
+* **chaos** — MARINA-P on the paper's L1 workload, clean vs through a
+  degraded fleet (the acceptance fault model: 10% drop, 2% corruption,
+  reorder window 4). Reports goodput, retry/resync counters, and
+  ``rounds_ratio`` = faulty/clean rounds to the same loss target — the
+  end-to-end price of the fault model. Deterministic (seeded injectors +
+  seeded algorithm), so CI gates on goodput and rounds_ratio.
+
+Usage: PYTHONPATH=src python benchmarks/transport_bench.py
+       (or via the harness: python -m benchmarks.run transport)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import problems, stepsizes, marina_p
+from repro.transport import FaultSpec, Fleet, FrameType, crc32c, decode_frame, encode_frame
+
+CHAOS_SPEC = FaultSpec(drop=0.10, corrupt=0.02, reorder=0.10, reorder_window=4, seed=7)
+
+
+def _time(fn, iters=5):
+    fn()  # warm-up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def framing_rows():
+    payload = np.random.default_rng(0).integers(0, 256, 1 << 16, dtype=np.uint8).tobytes()
+    buf = encode_frame(FrameType.DATA, 1, payload)
+    gb = len(payload) / 1e9
+    rows = []
+    dt = _time(lambda: encode_frame(FrameType.DATA, 1, payload))
+    rows.append(("transport/frame_encode", dt * 1e6, round(gb / dt, 4)))
+    dt = _time(lambda: decode_frame(buf))
+    rows.append(("transport/frame_decode", dt * 1e6, round(gb / dt, 4)))
+    dt = _time(lambda: crc32c(payload))
+    rows.append(("transport/crc32c", dt * 1e6, round(gb / dt, 4)))
+    return rows
+
+
+def chaos_metrics():
+    """Clean vs degraded MARINA-P; returns the gateable scalars."""
+    prob = problems.generate_problem(n=8, d=64, noise_scale=1.0, seed=0)
+    k = prob.d // prob.n
+    p = k / prob.d
+    ss = stepsizes.MarinaPPolyak(omega=prob.n - 1, p=p, f_star=prob.f_star)
+
+    clean = marina_p.run(prob, mode="perm", k=k, p=p, stepsize=ss, T=120, seed=1)
+    target = 0.25 * clean["f_x"][0]
+    r_clean = next(t for t, f in zip(clean["t"], clean["f_x"]) if f < target)
+
+    fleet = Fleet.make(prob.n, CHAOS_SPEC, timeout=2, max_retries=1)
+    t0 = time.perf_counter()
+    h = marina_p.run(prob, mode="perm", k=k, p=p, stepsize=ss, T=120, seed=1,
+                     transport=fleet)
+    chaos_s = time.perf_counter() - t0
+    r_faulty = next(
+        (t for t, f in zip(h["t"], h["f_x"]) if f < target), h["t"][-1]
+    )
+    tr = h["transport"]
+    return {
+        "transport/goodput": round(tr["transport/goodput"], 4),
+        "transport/rounds_ratio": round(r_faulty / max(r_clean, 1), 4),
+        "transport/retries": tr["transport/retries"],
+        "transport/resyncs": tr["transport/resyncs"],
+        "transport/forced_syncs": tr["transport/forced_syncs"],
+        "transport/recovery_ticks_mean": round(tr["transport/recovery_ticks_mean"], 3),
+        "transport/chaos_run_s": round(chaos_s, 3),
+    }
+
+
+def bench(tracker=None):
+    """benchmarks.run harness adapter: (name, us_per_call, derived) rows.
+
+    Framing rows carry GB/s deriveds; the chaos-run scalars (goodput,
+    rounds_ratio, counters) go through ``tracker`` so the BENCH artifact
+    can gate on them.
+    """
+    rows = framing_rows()
+    metrics = chaos_metrics()
+    if tracker is not None:
+        tracker.log(metrics)
+    return rows
+
+
+def main():
+    print("== framing throughput (GB/s) ==")
+    for name, us, gbs in framing_rows():
+        print(f"{name:28s} {us:10.1f} us/call   {gbs:8.4f} GB/s")
+    print("\n== chaos run (10% drop, 2% corrupt, reorder w=4) ==")
+    for name, v in chaos_metrics().items():
+        print(f"{name:32s} {v}")
+
+
+if __name__ == "__main__":
+    main()

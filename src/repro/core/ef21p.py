@@ -52,7 +52,7 @@ def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsiz
     (the compressed difference) so the host can serialize it (wire
     measurement path)."""
 
-    def step(state: EF21PState, key):
+    def step(state: EF21PState, key, force_sync=False):
         # --- workers: subgradients at the shared shift w^t ------------------
         w_stack = jnp.broadcast_to(state.w, (problem.n, problem.d))
         g_all = problem.subgrad_all(w_stack)  # [n, d]
@@ -65,13 +65,16 @@ def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsiz
         gamma = stepsize(state.t, aux)
         x_new = state.x - gamma * g
         # --- downlink: compressed difference ---------------------------------
-        delta = comp(key, x_new - state.w)
+        # force_sync re-anchors the shift with a dense w := x broadcast — the
+        # transport layer's degraded-mode recovery (DESIGN.md §8.4)
+        delta = jnp.where(force_sync, x_new - state.w, comp(key, x_new - state.w))
         w_new = state.w + delta
         metrics = {
             "f_x": problem.f(x_new),
             "f_w": aux["f_w"],
             "gamma": gamma,
             "delta_nnz": jnp.sum(delta != 0).astype(jnp.float32),
+            "full_sync": jnp.asarray(force_sync, jnp.float32),
         }
         if return_delta:
             metrics["delta"] = delta
@@ -91,6 +94,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    transport=None,
     tracker=None,
 ):
     """Host loop driving the jitted round; returns history dict.
@@ -103,24 +107,45 @@ def run(
     DESIGN.md §3.5); the primary ledger keeps the paper's 64-bit model so
     ``bit_budget`` semantics do not change under measurement.
 
+    ``transport`` (a :class:`repro.transport.Fleet`, or a
+    :class:`repro.transport.FaultSpec` to build one) pushes each round's
+    broadcast through fault-injected reliable links. EF21-P's shift must
+    stay synchronized across server and workers, so the commit is
+    two-phase (DESIGN.md §8.4): if any worker misses the broadcast, the
+    server rolls its shift back (``w`` unchanged — the round still
+    advances ``x``) and the next round re-anchors with a dense
+    ``w := x`` SYNC broadcast, charged dense bits by the ledger.
+    ``hist["transport"]`` carries the fleet counters.
+
     Uplink is exact (Algorithm 1), so the ledger also accrues one dense
     w2s message per round (hist["w2s_bits"]). ``tracker`` (a
     :class:`repro.obs.Tracker`) receives the recorded rounds as
     step-indexed metric events.
     """
     assert T is not None or bit_budget is not None
+    need_delta = measure_wire or transport is not None
     wire_model_ledger = None
-    if measure_wire:
+    fleet = None
+    if need_delta:
         import numpy as np
 
         from repro import wire
-
+    if measure_wire:
         wire_model_ledger = CommLedger(
             model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
         )
+    if transport is not None:
+        from repro.transport import FaultSpec, Fleet
+
+        fleet = (
+            Fleet.make(problem.n, transport, timeout=2, max_retries=2)
+            if isinstance(transport, FaultSpec)
+            else transport
+        )
+        assert len(fleet) == problem.n, (len(fleet), problem.n)
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, comp, stepsize, return_delta=measure_wire))
+    step = jax.jit(make_step(problem, comp, stepsize, return_delta=need_delta))
     state = init(problem.x0)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
@@ -128,6 +153,7 @@ def run(
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
+    force_sync = False
     t = 0
     while True:
         if T is not None and t >= T:
@@ -135,15 +161,38 @@ def run(
         if bit_budget is not None and ledger.s2w_bits >= bit_budget:
             break
         key, sub = jax.random.split(key)
-        state, m = step(state, sub)
-        ledger.log_s2w_sparse(float(m["delta_nnz"]))
+        prev_w = state.w
+        state, m = step(state, sub, force_sync)
+        synced = force_sync
+        force_sync = False
+        if fleet is not None:
+            if synced:  # self-contained re-anchor: the full new shift
+                payload = wire.encode_dense(np.asarray(state.w), mag=wire_mag)
+            else:
+                payload = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+            oks = fleet.broadcast(payload, sync=synced)
+            fleet.drain()
+            if not all(oks) or fleet.resync_needed:
+                # two-phase commit: some worker is stale — keep the server
+                # shift at w^t and repair next round with a dense re-anchor
+                state = state._replace(w=prev_w)
+                force_sync = True
+        if synced:
+            ledger.log_s2w_dense()
+        else:
+            ledger.log_s2w_sparse(float(m["delta_nnz"]))
         ledger.log_w2s_dense()  # uplink: exact subgradient every round
         ledger.tick()
         if measure_wire:
-            wire_model_ledger.log_s2w_sparse(float(m["delta_nnz"]))
+            if synced:
+                wire_model_ledger.log_s2w_dense()
+            else:
+                wire_model_ledger.log_s2w_sparse(float(m["delta_nnz"]))
             wire_model_ledger.tick()
             wire_total += wire.measured_bits(
-                wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+                wire.encode_dense(np.asarray(m["delta"]), mag=wire_mag)
+                if synced
+                else wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
             )
         if t % record_every == 0:
             hist["t"].append(t)
@@ -171,4 +220,10 @@ def run(
     if measure_wire:
         hist["wire_bits_total"] = wire_total
         hist["wire_model_ledger"] = wire_model_ledger
+    if fleet is not None:
+        stats = fleet.stats()
+        hist["transport"] = stats.as_metrics()
+        hist["transport_stats"] = stats
+        if tracker is not None:
+            fleet.log_to(tracker, step=t)
     return hist

@@ -109,7 +109,7 @@ def make_step(
     n = problem.n
     bcast, _ = make_broadcast(mode, n, k)
 
-    def step(state: MarinaPState, key):
+    def step(state: MarinaPState, key, force_sync=False):
         k_bern, k_comp = jax.random.split(key)
         # --- workers: subgradients at their own shifts -----------------------
         g_all = problem.subgrad_all(state.W)  # [n, d]
@@ -122,7 +122,9 @@ def make_step(
         gamma = stepsize(state.t, aux)
         x_new = state.x - gamma * g
         # --- downlink ---------------------------------------------------------
-        c = jax.random.bernoulli(k_bern, p)
+        # force_sync promotes this round to the full-broadcast branch — the
+        # transport layer's degraded-mode resync (DESIGN.md §8.4)
+        c = jnp.logical_or(jax.random.bernoulli(k_bern, p), force_sync)
         Q = bcast(k_comp, x_new - state.x)  # [n, d]
         W_compressed = state.W + Q
         W_new = jnp.where(c, jnp.broadcast_to(x_new, state.W.shape), W_compressed)
@@ -155,6 +157,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    transport=None,
     tracker=None,
 ):
     """Host loop; stops on T rounds or per-worker downlink bit budget.
@@ -166,24 +169,46 @@ def run(
     primary ledger keeps the paper's 64-bit model, so ``bit_budget``
     semantics are identical with and without measurement.
 
+    ``transport`` (a :class:`repro.transport.Fleet` of per-worker links,
+    or a :class:`repro.transport.FaultSpec` to build one) pushes every
+    round's encoded messages through fault-injected reliable links
+    (DESIGN.md §8.4): a worker whose frame cannot be delivered keeps its
+    stale shift for the round (its W row is rolled back), and any link
+    flagging ``resync_needed`` promotes the *next* round to the full sync
+    broadcast (``force_sync``), whose self-contained SYNC frame repairs
+    the receiver. Degraded rounds are charged dense bits by the ledger
+    exactly like organic ``p``-coin syncs. ``hist["transport"]`` carries
+    the fleet counters (retries, resyncs, goodput, recovery latency).
+
     Uplink is exact (Algorithm 2: workers send raw subgradients), so the
     ledger also accrues one dense w2s message per round
     (hist["w2s_bits"]). ``tracker`` (a :class:`repro.obs.Tracker`)
     receives the recorded rounds as step-indexed metric events.
     """
     assert T is not None or bit_budget is not None
+    need_q = measure_wire or transport is not None
     wire_model_ledger = None
-    if measure_wire:
+    fleet = None
+    if need_q:
         import numpy as np
 
         from repro import wire
-
+    if measure_wire:
         wire_model_ledger = CommLedger(
             model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
         )
+    if transport is not None:
+        from repro.transport import FaultSpec, Fleet
+
+        fleet = (
+            Fleet.make(problem.n, transport, timeout=2, max_retries=2)
+            if isinstance(transport, FaultSpec)
+            else transport
+        )
+        assert len(fleet) == problem.n, (len(fleet), problem.n)
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=measure_wire))
+    step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=need_q))
     state = init(problem.x0, problem.n)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
@@ -191,6 +216,7 @@ def run(
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
+    force_sync = False
     t = 0
     while True:
         if T is not None and t >= T:
@@ -198,8 +224,24 @@ def run(
         if bit_budget is not None and ledger.s2w_bits >= bit_budget:
             break
         key, sub = jax.random.split(key)
-        state, m = step(state, sub)
+        prev_W = state.W
+        state, m = step(state, sub, force_sync)
+        force_sync = False
         full_sync = float(m["full_sync"]) > 0
+        if fleet is not None:
+            if full_sync:
+                payload = wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
+                oks = fleet.broadcast(payload, sync=True)
+            else:
+                Q = np.asarray(m["Q"])
+                oks = fleet.send_per_worker(
+                    [wire.encode_sparse(Q[i], mag=wire_mag) for i in range(problem.n)]
+                )
+            if not all(oks):  # undelivered workers keep their stale shifts
+                mask = jnp.asarray(oks)[:, None]
+                state = state._replace(W=jnp.where(mask, state.W, prev_W))
+            fleet.drain()
+            force_sync = fleet.resync_needed or not all(oks)
         if full_sync:
             ledger.log_s2w_dense()
         else:
@@ -254,4 +296,10 @@ def run(
     if measure_wire:
         hist["wire_bits_total"] = wire_total
         hist["wire_model_ledger"] = wire_model_ledger
+    if fleet is not None:
+        stats = fleet.stats()
+        hist["transport"] = stats.as_metrics()
+        hist["transport_stats"] = stats
+        if tracker is not None:
+            fleet.log_to(tracker, step=t)
     return hist

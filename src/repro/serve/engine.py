@@ -29,6 +29,8 @@ def apply_wire_delta(params, buf: bytes):
     the replicated delta (a training worker, not a serving replica); see
     DESIGN.md §3.2.
     """
+    import numpy as np
+
     from repro import wire
 
     codec, d = wire.peek(buf)
@@ -40,8 +42,38 @@ def apply_wire_delta(params, buf: bytes):
     flat, unravel = jax.flatten_util.ravel_pytree(params)
     if d != flat.shape[-1]:
         raise ValueError(f"wire message dimension {d} != param count {flat.shape[-1]}")
+    # Validate fully before mutating: decode to scratch, check it, then swap.
+    # A truncated/corrupt buffer raises inside decode; a syntactically valid
+    # buffer carrying non-finite magnitudes is rejected here so the served
+    # params are never poisoned by a half-applied update.
     delta = wire.decode(buf)
+    if not np.all(np.isfinite(delta)):
+        raise wire.CorruptFrame("wire delta carries non-finite values")
     return unravel(flat + jnp.asarray(delta, flat.dtype))
+
+
+def apply_wire_sync(params, buf: bytes):
+    """Replace a parameter pytree with a full-model wire message.
+
+    The payload of a transport SYNC frame is self-contained — the complete
+    raveled model, not a difference — so it overwrites rather than adds
+    (that is what makes it repair a replica that missed deltas). Same
+    validate-before-mutate discipline as :func:`apply_wire_delta`.
+    """
+    import numpy as np
+
+    from repro import wire
+
+    codec, d = wire.peek(buf)
+    if codec == wire.CodecID.SEED:
+        raise ValueError("SEED wire messages cannot carry a full model")
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    if d != flat.shape[-1]:
+        raise ValueError(f"wire message dimension {d} != param count {flat.shape[-1]}")
+    full = wire.decode(buf)
+    if not np.all(np.isfinite(full)):
+        raise wire.CorruptFrame("wire sync carries non-finite values")
+    return unravel(jnp.asarray(full, flat.dtype))
 
 
 def greedy_sample(key, logits):
@@ -111,10 +143,53 @@ class DecodeEngine:
             self.cfg, self.batch_size, self.cache_len, window_override=self.window_override
         )
 
+    _delta_seq: Optional[int] = dataclasses.field(default=None, init=False)
+
     def delta_sync(self, buf: bytes) -> None:
-        """Apply a decoded wire delta message to the served params in place
-        (compressed model-update downlink from a training server)."""
-        self.params = apply_wire_delta(self.params, buf)
+        """Apply a wire delta message to the served params in place
+        (compressed model-update downlink from a training server).
+
+        ``buf`` may be a bare wire message or a transport frame
+        (DESIGN.md §8). Framed deltas are sequence-gated: a DATA frame at
+        or below the last applied sequence raises
+        :class:`~repro.transport.StaleDelta` (duplicate / out-of-order
+        delivery must not be re-applied — deltas are not idempotent), and
+        a DATA frame that skips ahead raises
+        :class:`~repro.transport.SequenceGap` (a missed delta means the
+        replica needs a resync, not a silent apply). SYNC frames carry
+        the full model (self-contained — :func:`apply_wire_sync`
+        replaces rather than adds), are accepted at any forward
+        sequence, and reset the gate. The params are only mutated after
+        the payload fully validates (decode-to-scratch first)."""
+        from repro import transport
+
+        if transport.is_frame(bytes(buf)):
+            frame, _ = transport.decode_frame(bytes(buf))
+            if frame.ftype == transport.FrameType.SYNC:
+                if self._delta_seq is not None and frame.seq <= self._delta_seq:
+                    raise transport.StaleDelta(
+                        f"sync seq {frame.seq} <= last applied {self._delta_seq}"
+                    )
+                self.params = apply_wire_sync(self.params, frame.payload)
+                self._delta_seq = frame.seq
+                return
+            if frame.ftype == transport.FrameType.DATA:
+                if self._delta_seq is not None:
+                    if frame.seq <= self._delta_seq:
+                        raise transport.StaleDelta(
+                            f"delta seq {frame.seq} <= last applied {self._delta_seq}"
+                        )
+                    if frame.seq != self._delta_seq + 1:
+                        raise transport.SequenceGap(
+                            f"delta seq {frame.seq} skips past "
+                            f"{self._delta_seq + 1}; resync required"
+                        )
+            else:
+                raise ValueError(f"frame type {frame.ftype!r} carries no delta")
+            self.params = apply_wire_delta(self.params, frame.payload)
+            self._delta_seq = frame.seq
+        else:
+            self.params = apply_wire_delta(self.params, buf)
 
     def run(self, prompts: jax.Array, n_new_tokens: int, seed: int = 0):
         """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n].

@@ -97,16 +97,18 @@ class MarinaPDownlink:
             lambda t: jnp.broadcast_to(t[None], (self.n_workers,) + t.shape), server_params
         )
 
-    def round(self, key, server_new, server_old, worker_params):
+    def round(self, key, server_new, server_old, worker_params, force_sync=False):
         """One downlink round -> (new worker params, bits/worker this round).
 
         The Bernoulli branch is a ``lax.cond`` so only one of
         {full-sync broadcast, compressed update} materializes per round
         (§Perf iteration C1 — jnp.where evaluated both, costing ~2x the
-        downlink HBM traffic).
+        downlink HBM traffic). ``force_sync`` promotes the round to the
+        full broadcast unconditionally — the transport layer's resync
+        path (DESIGN.md §8.4).
         """
         k_bern, k_comp = jax.random.split(key)
-        c = jax.random.bernoulli(k_bern, self.sync_p)
+        c = jnp.logical_or(jax.random.bernoulli(k_bern, self.sync_p), force_sync)
         n = self.n_workers
 
         def sync_branch(operands):
@@ -159,6 +161,52 @@ class MarinaPDownlink:
         )
         return sum(jax.tree.leaves(sq)) / self.n_workers
 
+    def _dense_buf(self, server_new, mag):
+        """Serialize the full model for a sync broadcast."""
+        import jax.flatten_util  # noqa: F401  (registers jax.flatten_util)
+        import numpy as np
+
+        from repro import wire
+
+        flat = np.asarray(
+            jax.flatten_util.ravel_pytree(
+                jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
+            )[0]
+        )
+        return wire.encode_dense(flat, mag=mag)
+
+    def _sparse_bufs(self, k_comp, server_new, server_old, mag):
+        """Per-worker compressed-delta buffers, replaying :meth:`round`'s
+        randomness over the raveled tree. 'same' mode encodes once and
+        repeats the buffer (every worker's message is identical)."""
+        import numpy as np
+
+        from repro import wire
+
+        n = self.n_workers
+        leaves_new, _ = jax.tree.flatten(server_new)
+        leaves_old = jax.tree.leaves(server_old)
+        bufs = []
+        for widx in range(1 if self.mode == "same" else n):
+            parts = []
+            for li, (xn, xo) in enumerate(zip(leaves_new, leaves_old)):
+                delta = (xn - xo).astype(jnp.float32)
+                lk = jax.random.fold_in(k_comp, li)
+                if self.mode == "perm":
+                    m = _leaf_rotk_mask(lk, xn.shape, n, widx)
+                    q = jnp.where(m, delta * n, 0)
+                elif self.mode == "ind":
+                    m = _leaf_bern_mask(jax.random.fold_in(lk, widx), xn.shape, self.frac)
+                    q = jnp.where(m, delta / self.frac, 0)
+                else:  # same
+                    m = _leaf_bern_mask(lk, xn.shape, self.frac)
+                    q = jnp.where(m, delta / self.frac, 0)
+                parts.append(np.asarray(q).reshape(-1))
+            bufs.append(wire.encode_sparse(np.concatenate(parts), mag=mag))
+        if self.mode == "same":
+            bufs = bufs * n
+        return bufs
+
     def measure_wire(self, key, server_new, server_old, *, mag="fp32",
                      tracker=None, step=None) -> dict:
         """Host-side wire measurement (measure_wire=True path).
@@ -171,7 +219,6 @@ class MarinaPDownlink:
         the accounting/verification path, not the training hot path.
         ``tracker`` logs the result as a ``downlink/*`` metric event.
         """
-        import jax.flatten_util  # noqa: F401  (registers jax.flatten_util)
         import numpy as np
 
         from repro import wire
@@ -194,39 +241,15 @@ class MarinaPDownlink:
             d,
         )
         if c:
-            flat = np.asarray(
-                jax.flatten_util.ravel_pytree(
-                    jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
-                )[0]
-            )
-            bits = float(wire.measured_bits(wire.encode_dense(flat, mag=mag)))
+            bits = float(wire.measured_bits(self._dense_buf(server_new, mag)))
             return _track_wire(tracker, step, {
                 "full_sync": True, "bits_mean": bits, "bits_per_worker": [bits] * n,
                 "bits_seed": float(wire.measured_bits(seed_buf)),
                 "bits_analytic": cm.dense_bits()})
-        leaves_new, _ = jax.tree.flatten(server_new)
-        leaves_old = jax.tree.leaves(server_old)
-        per_worker = []
-        # 'same' mode: every worker's message is identical — encode once
-        for widx in range(1 if self.mode == "same" else n):
-            parts = []
-            for li, (xn, xo) in enumerate(zip(leaves_new, leaves_old)):
-                delta = (xn - xo).astype(jnp.float32)
-                lk = jax.random.fold_in(k_comp, li)
-                if self.mode == "perm":
-                    m = _leaf_rotk_mask(lk, xn.shape, n, widx)
-                    q = jnp.where(m, delta * n, 0)
-                elif self.mode == "ind":
-                    m = _leaf_bern_mask(jax.random.fold_in(lk, widx), xn.shape, self.frac)
-                    q = jnp.where(m, delta / self.frac, 0)
-                else:  # same
-                    m = _leaf_bern_mask(lk, xn.shape, self.frac)
-                    q = jnp.where(m, delta / self.frac, 0)
-                parts.append(np.asarray(q).reshape(-1))
-            buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
-            per_worker.append(float(wire.measured_bits(buf)))
-        if self.mode == "same":
-            per_worker = per_worker * n
+        per_worker = [
+            float(wire.measured_bits(buf))
+            for buf in self._sparse_bufs(k_comp, server_new, server_old, mag)
+        ]
         return _track_wire(tracker, step, {
             "full_sync": False,
             "bits_mean": sum(per_worker) / n,
@@ -234,6 +257,43 @@ class MarinaPDownlink:
             "bits_seed": float(wire.measured_bits(seed_buf)),
             "bits_analytic": cm.sparse_bits(self.frac * d),
         })
+
+    def broadcast_via(self, fleet, key, server_new, server_old, *, mag="fp32",
+                      force_sync=False, tracker=None, step=None) -> dict:
+        """Push this round's broadcast through a :class:`repro.transport.Fleet`.
+
+        Replays the same randomness :meth:`round` consumed (pass the same
+        ``key`` and ``force_sync``), serializes the actual per-worker
+        messages, and delivers them over the fault-injected links. Sync
+        rounds travel as self-contained SYNC frames (they repair any
+        receiver gap). Returns per-worker delivery flags plus whether the
+        *next* round must be promoted to a full sync (DESIGN.md §8.4).
+        """
+        k_bern, k_comp = jax.random.split(key)
+        c = bool(jax.random.bernoulli(k_bern, self.sync_p)) or bool(force_sync)
+        if c:
+            oks = fleet.broadcast(self._dense_buf(server_new, mag), sync=True)
+        else:
+            oks = fleet.send_per_worker(
+                self._sparse_bufs(k_comp, server_new, server_old, mag)
+            )
+        fleet.drain()
+        res = {
+            "full_sync": c,
+            "oks": oks,
+            "delivered_frac": sum(oks) / len(oks),
+            "resync_needed": fleet.resync_needed or not all(oks),
+        }
+        if tracker is not None:
+            tracker.log(
+                {
+                    "downlink/full_sync": c,
+                    "downlink/delivered_frac": res["delivered_frac"],
+                },
+                step=step,
+            )
+            fleet.log_to(tracker, step=step)
+        return res
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,16 +312,23 @@ class EF21PDownlink:
         """w^0 = x^0; one tree — workers stay synchronized by construction."""
         return jax.tree.map(lambda t: t, server_params)
 
-    def round(self, key, server_new, shift):
+    def round(self, key, server_new, shift, force_sync=False):
+        """``force_sync`` re-anchors the shift with a dense ``w := x``
+        broadcast — the transport layer's resync path (DESIGN.md §8.4)."""
         comp = self.comp
         new_shift = jax.tree.map(
-            lambda xn, w: w + comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1)).reshape(w.shape).astype(w.dtype),
+            lambda xn, w: jnp.where(
+                force_sync,
+                xn.astype(w.dtype),
+                w + comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1)).reshape(w.shape).astype(w.dtype),
+            ),
             server_new,
             shift,
         )
         d = tree_size(server_new)
         frac = self.k_per_block / self.block
-        bits = jnp.asarray(CommModel(d=d).sparse_bits(frac * d))
+        cm = CommModel(d=d)
+        bits = jnp.where(force_sync, cm.dense_bits(), cm.sparse_bits(frac * d))
         return new_shift, bits
 
     def init_workers(self, server_params):
@@ -292,6 +359,56 @@ class EF21PDownlink:
             "bits_per_worker": [float(wire.measured_bits(buf))] * self.n_workers,
             "bits_analytic": cm.sparse_bits(frac * d),
         })
+
+    def broadcast_via(self, fleet, key, server_new, shift, *, mag="fp32",
+                      force_sync=False, tracker=None, step=None) -> dict:
+        """Deliver one EF21-P broadcast through a transport Fleet.
+
+        A sync round ships the full model (``w := x`` re-anchor) as a
+        self-contained SYNC frame; otherwise the block-TopK compressed
+        difference, identical for every worker. ``resync_needed`` in the
+        result means the caller must pass ``force_sync=True`` to the next
+        :meth:`round` (and roll its shift back — DESIGN.md §8.4).
+        """
+        import jax.flatten_util  # noqa: F401
+        import numpy as np
+
+        from repro import wire
+
+        if force_sync:
+            flat = np.asarray(
+                jax.flatten_util.ravel_pytree(
+                    jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
+                )[0]
+            )
+            buf = wire.encode_dense(flat, mag=mag)
+        else:
+            comp = self.comp
+            parts = [
+                np.asarray(
+                    comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
+                )
+                for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
+            ]
+            buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+        oks = fleet.broadcast(buf, sync=bool(force_sync))
+        fleet.drain()
+        res = {
+            "full_sync": bool(force_sync),
+            "oks": oks,
+            "delivered_frac": sum(oks) / len(oks),
+            "resync_needed": fleet.resync_needed or not all(oks),
+        }
+        if tracker is not None:
+            tracker.log(
+                {
+                    "downlink/full_sync": res["full_sync"],
+                    "downlink/delivered_frac": res["delivered_frac"],
+                },
+                step=step,
+            )
+            fleet.log_to(tracker, step=step)
+        return res
 
     def worker_drift(self, server_params, shift) -> Array:
         sq = jax.tree.map(

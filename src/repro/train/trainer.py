@@ -38,6 +38,8 @@ class TrainerConfig:
     window_override: Optional[int] = None
     remat_policy: Optional[str] = None    # None/"full" | "dots" (§Perf C2)
     act_spec: Any = None                  # within-worker activation spec (§Perf C3)
+    drop_prob: float = 0.0                # per-round worker drop probability
+    straggler_cutoff: float = 0.0         # >0: drop workers with Exp(1) latency above it
 
 
 def init_state(cfg: ModelConfig, tcfg: TrainerConfig, downlink, optimizer: Optimizer, key):
@@ -78,7 +80,9 @@ def make_train_step(
 
     grad_fn = jax.value_and_grad(loss_of)
 
-    def train_step(state, batch, key):
+    partial = tcfg.drop_prob > 0 or tcfg.straggler_cutoff > 0
+
+    def train_step(state, batch, key, force_sync=False):
         server = state["server"]
         # ---- workers: forward/backward on their own replica -----------------
         if downlink is None:
@@ -89,9 +93,35 @@ def make_train_step(
         else:
             workers = state["workers"]
             losses, grads_w = jax.vmap(grad_fn)(workers, batch)
-        # ---- uplink: exact aggregation --------------------------------------
-        grads = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads_w)
-        loss = jnp.mean(losses)
+        # ---- uplink: exact aggregation over the round's participants ---------
+        # Partial participation (DESIGN.md §8.5): each round a worker sits out
+        # with probability drop_prob, and/or when its Exp(1) latency draw
+        # exceeds straggler_cutoff (the server's straggler deadline). Only the
+        # uplink aggregation is masked — the downlink still addresses everyone.
+        # The participation key is folded off to the side so the downlink RNG
+        # stream is bit-identical to the drop_prob=0 path.
+        if partial:
+            n = tcfg.n_workers
+            k_part = jax.random.fold_in(key, 0x5052)
+            k_drop, k_lat = jax.random.split(k_part)
+            participate = jnp.ones((n,), bool)
+            if tcfg.drop_prob > 0:
+                participate &= jax.random.uniform(k_drop, (n,)) >= tcfg.drop_prob
+            if tcfg.straggler_cutoff > 0:
+                participate &= (
+                    jax.random.exponential(k_lat, (n,)) <= tcfg.straggler_cutoff
+                )
+            n_part = jnp.maximum(jnp.sum(participate), 1)
+            w = participate.astype(jnp.float32) / n_part
+            grads = jax.tree.map(
+                lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1), grads_w
+            )
+            loss = jnp.sum(w * losses)
+        else:
+            grads = jax.tree.map(
+                lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads_w
+            )
+            loss = jnp.mean(losses)
         gnorm_sq = sum(jnp.sum(g * g) for g in jax.tree.leaves(grads))
         # ---- server master update --------------------------------------------
         if tcfg.polyak_factor > 0:
@@ -111,16 +141,22 @@ def make_train_step(
         }
         metrics = {"loss": loss, "grad_norm": jnp.sqrt(gnorm_sq), "lr": lr,
                    "uplink_bits_per_worker": uplink_bits}
+        if partial:
+            metrics["participants"] = jnp.sum(participate).astype(jnp.float32)
         # ---- downlink: compressed broadcast ----------------------------------
         if downlink is None:
             pass
         elif isinstance(downlink, EF21PDownlink):
-            shift_new, bits = downlink.round(key, server_new, state["workers"])
+            shift_new, bits = downlink.round(
+                key, server_new, state["workers"], force_sync
+            )
             new_state["workers"] = shift_new
             new_state["bits_per_worker"] = state["bits_per_worker"] + bits
             metrics["drift"] = downlink.worker_drift(server_new, shift_new)
         else:
-            workers_new, bits = downlink.round(key, server_new, server, state["workers"])
+            workers_new, bits = downlink.round(
+                key, server_new, server, state["workers"], force_sync
+            )
             new_state["workers"] = workers_new
             new_state["bits_per_worker"] = state["bits_per_worker"] + bits
             metrics["drift"] = downlink.worker_drift(server_new, workers_new)
@@ -142,6 +178,8 @@ def train_loop(
     key,
     tracker=None,
     log_every: int = 1,
+    transport=None,
+    wire_mag: str = "fp32",
 ):
     """Host loop around the jitted step with per-step telemetry.
 
@@ -149,6 +187,15 @@ def train_loop(
     ("train/step") and its metrics (loss, grad_norm, lr, drift,
     bits_per_worker, uplink_bits_per_worker) are logged to ``tracker``
     at ``log_every`` cadence. Returns (final_state, last_metrics).
+
+    ``transport`` (a :class:`repro.transport.Fleet` or a
+    :class:`repro.transport.FaultSpec`) additionally pushes each round's
+    downlink through fault-injected reliable links via the downlink's
+    ``broadcast_via``; a round whose delivery degrades (undelivered
+    worker or receiver resync request) promotes the *next* round's
+    broadcast to a full sync, whose self-contained SYNC frame repairs
+    every receiver (DESIGN.md §8.4). The last metrics dict then carries
+    the fleet counters under ``"transport"``.
     """
     from repro import obs
 
@@ -156,12 +203,40 @@ def train_loop(
     k_init, k_steps = jax.random.split(key)
     state = init_state(cfg, tcfg, downlink, optimizer, k_init)
     step = jax.jit(make_train_step(cfg, tcfg, downlink, optimizer, lr_fn))
+    fleet = None
+    if transport is not None and downlink is not None:
+        from repro.transport import FaultSpec, Fleet
+
+        fleet = (
+            Fleet.make(tcfg.n_workers, transport, timeout=2, max_retries=2)
+            if isinstance(transport, FaultSpec)
+            else transport
+        )
     m = {}
+    force_sync = False
     for i in range(steps):
         batch = data.batch(i)
+        k_step = jax.random.fold_in(k_steps, i)
+        prev_server = state["server"]
+        prev_workers = state.get("workers")
         with tracker.time_block("train/step", step=i) as tb:
-            state, m = step(state, batch, jax.random.fold_in(k_steps, i))
+            state, m = step(state, batch, k_step, force_sync)
             tb.block(m)
+        if fleet is not None:
+            if isinstance(downlink, EF21PDownlink):
+                res = downlink.broadcast_via(
+                    fleet, k_step, state["server"], prev_workers,
+                    mag=wire_mag, force_sync=force_sync, tracker=tracker, step=i,
+                )
+            else:
+                res = downlink.broadcast_via(
+                    fleet, k_step, state["server"], prev_server,
+                    mag=wire_mag, force_sync=force_sync, tracker=tracker, step=i,
+                )
+            force_sync = res["resync_needed"]
         if i % log_every == 0:
             tracker.log({"train": m}, step=i)
+    if fleet is not None:
+        m = dict(m)
+        m["transport"] = fleet.stats().as_metrics()
     return state, m

@@ -22,9 +22,12 @@ from .spec import (  # noqa: F401
     HEADER_BYTES,
     MAG_BITS,
     CodecID,
+    CorruptFrame,
     MagDType,
     SeedFamily,
     SeedMessage,
+    TruncatedFrame,
+    WireError,
     index_width,
     mag_dtype,
 )

@@ -60,5 +60,8 @@ def to_bytes(words: np.ndarray) -> bytes:
 
 
 def from_bytes(buf: bytes) -> np.ndarray:
-    assert len(buf) % 4 == 0, len(buf)
+    if len(buf) % 4 != 0:
+        from .spec import TruncatedFrame
+
+        raise TruncatedFrame(f"bitstream not word-aligned ({len(buf)} bytes)")
     return np.frombuffer(buf, dtype=_WORD)

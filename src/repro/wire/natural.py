@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from . import bitstream as bs
-from .spec import CodecID, pack_header
+from .spec import CodecID, TruncatedFrame, pack_header
 
 TOKEN_BITS = 9
 
@@ -33,7 +33,7 @@ def encode_natural(x) -> bytes:
 
 def decode_natural(buf: bytes, offset: int, d: int) -> np.ndarray:
     if len(buf) < offset + 4 * bs.n_words(d, TOKEN_BITS):
-        raise ValueError("truncated natural wire message")
+        raise TruncatedFrame("truncated natural wire message")
     words = bs.from_bytes(buf[offset : offset + 4 * bs.n_words(d, TOKEN_BITS)])
     token = bs.unpack_u32(words, TOKEN_BITS, d)
     sign = token >> np.uint32(8)

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.kernels.randk import hash_uniform
 
-from .spec import CodecID, SeedFamily, SeedMessage, pack_header
+from .spec import CodecID, CorruptFrame, SeedFamily, SeedMessage, TruncatedFrame, pack_header
 
 _PAYLOAD = struct.Struct("<BxxxIIfIIf")
 
@@ -43,10 +43,14 @@ def encode_seed(msg: SeedMessage, d: int) -> bytes:
 
 def decode_seed(buf: bytes, offset: int, d: int) -> SeedMessage:
     if len(buf) < offset + _PAYLOAD.size:
-        raise ValueError("truncated seed wire message")
+        raise TruncatedFrame("truncated seed wire message")
     family, seed, rnd, scale, n, worker, param = _PAYLOAD.unpack_from(buf, offset)
+    try:
+        family = SeedFamily(family)
+    except ValueError as e:
+        raise CorruptFrame(f"corrupt seed wire message: bad family {family}") from e
     return SeedMessage(
-        family=SeedFamily(family), seed=seed, round=rnd, scale=scale,
+        family=family, seed=seed, round=rnd, scale=scale,
         n=n, worker=worker, param=param,
     )
 

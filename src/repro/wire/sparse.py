@@ -20,7 +20,16 @@ import struct
 import numpy as np
 
 from . import bitstream as bs
-from .spec import CodecID, MAG_BITS, MagDType, index_width, mag_dtype, pack_header
+from .spec import (
+    CodecID,
+    CorruptFrame,
+    MAG_BITS,
+    MagDType,
+    TruncatedFrame,
+    index_width,
+    mag_dtype,
+    pack_header,
+)
 
 _PAYLOAD = struct.Struct("<BxxxI")
 
@@ -65,14 +74,19 @@ def encode_sparse(x, *, mag="fp32") -> bytes:
 def decode_sparse(buf: bytes, offset: int, d: int) -> np.ndarray:
     """Decode the payload at ``offset`` (past the common header) -> fp32 [d]."""
     if len(buf) < offset + _PAYLOAD.size:
-        raise ValueError("truncated sparse wire message")
+        raise TruncatedFrame("truncated sparse wire message")
     m, count = _PAYLOAD.unpack_from(buf, offset)
-    m = MagDType(m)
+    try:
+        m = MagDType(m)
+    except ValueError as e:
+        raise CorruptFrame(f"corrupt sparse wire message: bad mag dtype {m}") from e
     offset += _PAYLOAD.size
+    if count > d:
+        raise CorruptFrame(f"corrupt sparse wire message: count {count} > d={d}")
     iw = index_width(d)
     need = sum(4 * bs.n_words(count, w) for w in (iw, 1, MAG_BITS[m]))
     if len(buf) < offset + need:
-        raise ValueError("truncated sparse wire message")
+        raise TruncatedFrame("truncated sparse wire message")
     streams = []
     for width, n in ((iw, count), (1, count), (MAG_BITS[m], count)):
         nbytes = 4 * bs.n_words(n, width)
@@ -81,7 +95,7 @@ def decode_sparse(buf: bytes, offset: int, d: int) -> np.ndarray:
         offset += nbytes
     idx, sign, magbits = streams
     if idx.size and int(idx.max()) >= d:
-        raise ValueError(f"corrupt sparse wire message: index {int(idx.max())} >= d={d}")
+        raise CorruptFrame(f"corrupt sparse wire message: index {int(idx.max())} >= d={d}")
     fdt, udt = _mag_np_dtype(m)
     mags = magbits.astype({2: np.uint16, 4: np.uint32}[udt.itemsize]).view(fdt)
     vals = mags.astype(np.float32)
@@ -108,12 +122,15 @@ def encode_dense(x, *, mag="fp32") -> bytes:
 
 def decode_dense(buf: bytes, offset: int, d: int) -> np.ndarray:
     if len(buf) < offset + 4:
-        raise ValueError("truncated dense wire message")
+        raise TruncatedFrame("truncated dense wire message")
     (m,) = struct.unpack_from("<Bxxx", buf, offset)
-    m = MagDType(m)
+    try:
+        m = MagDType(m)
+    except ValueError as e:
+        raise CorruptFrame(f"corrupt dense wire message: bad mag dtype {m}") from e
     offset += 4
     if len(buf) < offset + 4 * bs.n_words(d, MAG_BITS[m]):
-        raise ValueError("truncated dense wire message")
+        raise TruncatedFrame("truncated dense wire message")
     words = bs.from_bytes(buf[offset : offset + 4 * bs.n_words(d, MAG_BITS[m])])
     bits = bs.unpack_u32(words, MAG_BITS[m], d)
     fdt, udt = _mag_np_dtype(m)

@@ -21,6 +21,25 @@ _HEADER = struct.Struct("<HBBI")
 HEADER_BYTES = _HEADER.size  # 8
 
 
+class WireError(ValueError):
+    """Base class for wire-level decode failures.
+
+    Subclasses ``ValueError`` so pre-hierarchy callers keep working; the
+    transport layer (repro.transport) catches the subclasses to tell a
+    retransmit-recoverable failure from a poisoned message.
+    """
+
+
+class TruncatedFrame(WireError):
+    """Buffer ended before the declared payload — recoverable: the rest of
+    the message may still arrive (or a retransmit will carry it whole)."""
+
+
+class CorruptFrame(WireError):
+    """Contents fail validation (magic / version / CRC / field range) —
+    the message itself is damaged and must be retransmitted or resynced."""
+
+
 class CodecID(enum.IntEnum):
     SPARSE = 1   # (index, sign, magnitude) streams
     SEED = 2     # shared-randomness coordinates, O(1) bytes
@@ -86,10 +105,14 @@ def pack_header(codec: CodecID, d: int) -> bytes:
 
 def unpack_header(buf: bytes) -> tuple[CodecID, int]:
     if len(buf) < HEADER_BYTES:
-        raise ValueError("truncated wire message (no header)")
+        raise TruncatedFrame("truncated wire message (no header)")
     magic, version, codec, d = _HEADER.unpack_from(buf, 0)
     if magic != MAGIC:
-        raise ValueError(f"bad magic {magic:#x}")
+        raise CorruptFrame(f"bad magic {magic:#x}")
     if version != VERSION:
-        raise ValueError(f"unsupported wire version {version}")
-    return CodecID(codec), d
+        raise CorruptFrame(f"unsupported wire version {version}")
+    try:
+        codec = CodecID(codec)
+    except ValueError as e:
+        raise CorruptFrame(f"unknown codec id {codec}") from e
+    return codec, d

@@ -246,7 +246,7 @@ def test_apply_wire_delta_roundtrip():
 
 
 def test_bad_magic_rejected():
-    with pytest.raises(ValueError):
+    with pytest.raises(wire.CorruptFrame):
         wire.decode(b"\x00" * 16)
 
 
@@ -261,17 +261,17 @@ def test_bad_magic_rejected():
 def test_truncated_messages_rejected_cleanly(make):
     buf = make()
     for cut in (4, wire.HEADER_BYTES + 2, len(buf) - 1):
-        with pytest.raises(ValueError):
+        with pytest.raises(wire.TruncatedFrame):
             wire.decode(buf[:cut], delta=np.ones(64, np.float32))
 
 
 def test_corrupt_index_rejected():
-    """An index bit-flipped past d must raise ValueError, not IndexError."""
+    """An index bit-flipped past d must raise CorruptFrame, not IndexError."""
     d = 100  # index_width(100)=7, so 127 is representable but out of range
     x = np.zeros(d, np.float32)
     x[5] = 1.0
     buf = bytearray(wire.encode_sparse(x))
     payload = wire.HEADER_BYTES + 8  # common header + sparse payload header
     buf[payload] = 127  # first 7-bit index -> 127
-    with pytest.raises(ValueError, match="corrupt"):
+    with pytest.raises(wire.CorruptFrame, match="corrupt"):
         wire.decode(bytes(buf))
