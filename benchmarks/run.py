@@ -15,6 +15,8 @@ and regression gates for ``benchmarks/bench_diff.py``. Modules:
                                 with measured-vs-analytic parity checks)
   transport_bench    DESIGN §8  frame/CRC throughput + clean-vs-degraded
                                 MARINA-P chaos run (goodput, rounds_ratio)
+  scenario_matrix    DESIGN §9  (algorithm x stepsize x client-mix) fleet
+                                cells, one BENCH_scenario_<cell>.json each
   roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
 
 Select subsets: ``python -m benchmarks.run fig1 table2 ...`` (default: all
@@ -56,6 +58,16 @@ GATES = {
         # degraded rounds-to-target / clean rounds-to-target
         {"pattern": "transport/rounds_ratio", "field": "value", "direction": "lower", "rtol": 0.5},
     ],
+    "scenario": [
+        _TIME,
+        # convergence speed per matrix cell (deterministic for a fixed seed;
+        # slack covers cross-platform float drift)
+        {"pattern": "scenario/*/rounds_to_target", "field": "value", "direction": "lower", "rtol": 0.5},
+        # analytic downlink cost must not creep up
+        {"pattern": "scenario/*/s2w_bits", "field": "value", "direction": "lower", "rtol": 0.5},
+        # delivered / sent participant messages under the mix's fault model
+        {"pattern": "scenario/*/goodput", "field": "value", "direction": "higher", "rtol": 0.3},
+    ],
 }
 
 
@@ -65,6 +77,7 @@ def main(argv=None) -> int:
         fig1_convergence,
         kernel_bench,
         roofline_report,
+        scenario_matrix,
         stepsize_grid,
         table2_sigma,
         transport_bench,
@@ -81,6 +94,10 @@ def main(argv=None) -> int:
         "wire": wire_bench.bench,
         "roofline": roofline_report.bench,
         "transport": transport_bench.bench,
+        # per-cell artifacts land next to the suite artifact (args.out is
+        # bound at call time, after parsing)
+        "scenario": lambda tracker=None: scenario_matrix.bench(
+            tracker=tracker, out_dir=args.out),
     }
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("suites", nargs="*",
@@ -99,7 +116,7 @@ def main(argv=None) -> int:
     selected = list(args.suites)
     if not selected:
         selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels",
-                    "wire", "transport"]
+                    "wire", "transport", "scenario"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
 

@@ -1,45 +1,23 @@
-"""Paper Table 3/6: tuned multiplicative stepsize factors.
+"""Deprecated: folded into ``benchmarks.scenario_matrix``.
 
-Sweeps the factor grid {2^-9 .. 2^7} (reduced stride by default) for each
-method and reports the best factor by final suboptimality — the paper's
-App. A tuning protocol.
+The Table 3/6 Polyak-factor sweep is now the stepsize axis of the
+scenario matrix (``scenario_matrix.polyak_factor_grid`` /
+``scenario_matrix.tune``). This shim keeps the ``stepsize_grid`` suite
+name in ``benchmarks/run.py`` and its historical row names stable.
 """
 from __future__ import annotations
 
-import time
+import warnings
 
-from repro.core import compressors as C
-from repro.core import ef21p, marina_p, problems, stepsizes
-
-
-def tune(method: str, prob, T=250, factors=None, seed=0):
-    d, n = prob.d, prob.n
-    k = max(1, d // n)
-    p, alpha = k / d, k / d
-    factors = factors or [2.0**e for e in range(-7, 6, 2)]
-    best = (None, float("inf"))
-    for f in factors:
-        if method == "ef21p":
-            ss = stepsizes.EF21PPolyak(alpha=alpha, f_star=0.0, factor=f)
-            h = ef21p.run(prob, C.TopK(k=k), ss, T=T, seed=seed, record_every=T - 1)
-        else:
-            omega = float(n - 1) if method == "perm" else d / k - 1.0
-            ss = stepsizes.MarinaPPolyak(omega=omega, p=p, f_star=0.0, factor=f)
-            h = marina_p.run(prob, mode=method, k=k, p=p, stepsize=ss, T=T,
-                             seed=seed, record_every=T - 1)
-        final = h["f_x"][-1]
-        if final < best[1]:
-            best = (f, final)
-    return best
+from benchmarks.scenario_matrix import polyak_factor_grid, tune  # noqa: F401
 
 
-def bench(tracker=None):
-    rows = []
-    prob = problems.generate_problem(n=10, d=120, noise_scale=1.0, seed=0)
-    for method in ("ef21p", "same", "ind", "perm"):
-        t0 = time.time()
-        f, final = tune(method, prob)
-        dt = (time.time() - t0) * 1e6
-        rows.append((f"stepsize_grid/polyak/{method}/best_factor", dt, f))
-        rows.append((f"stepsize_grid/polyak/{method}/final_subopt", dt, final))
-    return rows
+def bench(tracker=None, **kwargs):
+    warnings.warn(
+        "benchmarks.stepsize_grid is deprecated; use "
+        "benchmarks.scenario_matrix.polyak_factor_grid (the stepsize axis "
+        "of the scenario matrix)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return polyak_factor_grid(tracker=tracker, **kwargs)

@@ -45,23 +45,39 @@ def lyapunov(state: EF21PState, x_star: jax.Array, alpha: float) -> jax.Array:
 
 
 def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsize,
-              *, return_delta: bool = False):
+              *, return_delta: bool = False, participation=None):
     """Build a jittable round function (state, key) -> (state, metrics).
 
     ``return_delta=True`` additionally returns the broadcast message
     (the compressed difference) so the host can serialize it (wire
-    measurement path)."""
+    measurement path).
+
+    ``participation`` (a :class:`repro.fleet.ParticipationPlan`) masks the
+    uplink aggregation to the round's cohort; the shift broadcast still
+    addresses everyone (w stays synchronized by construction). The plan
+    key is folded off the main stream (§8.5/§9.2), keeping the compressor
+    RNG bit-identical with and without a plan; an empty cohort gives
+    g = 0 and f_w = 0, so Polyak's (13) degrades to gamma = 0, not NaN."""
+    plan = participation
+    partial = plan is not None and not plan.is_full
+    if partial:
+        from repro.fleet.sampler import PARTICIPATION_FOLD
 
     def step(state: EF21PState, key, force_sync=False):
         # --- workers: subgradients at the shared shift w^t ------------------
         w_stack = jnp.broadcast_to(state.w, (problem.n, problem.d))
         g_all = problem.subgrad_all(w_stack)  # [n, d]
-        g = jnp.mean(g_all, axis=0)
+        f_all = problem.f_all(w_stack)
         # --- server: stepsize (Polyak needs f(w^t) and ||g||^2) -------------
-        aux = {
-            "f_w": jnp.mean(problem.f_all(w_stack)),
-            "g_norm_sq": jnp.sum(g**2),
-        }
+        if partial:
+            k_part = jax.random.fold_in(key, PARTICIPATION_FOLD)
+            mask = plan.mask(k_part, problem.n, state.t)
+            wts = mask.astype(jnp.float32) / jnp.maximum(jnp.sum(mask), 1)
+            g = jnp.tensordot(wts, g_all, axes=1)
+            aux = {"f_w": jnp.sum(wts * f_all), "g_norm_sq": jnp.sum(g**2)}
+        else:
+            g = jnp.mean(g_all, axis=0)
+            aux = {"f_w": jnp.mean(f_all), "g_norm_sq": jnp.sum(g**2)}
         gamma = stepsize(state.t, aux)
         x_new = state.x - gamma * g
         # --- downlink: compressed difference ---------------------------------
@@ -76,6 +92,8 @@ def make_step(problem: L1Problem, comp: ContractiveCompressor, stepsize: Stepsiz
             "delta_nnz": jnp.sum(delta != 0).astype(jnp.float32),
             "full_sync": jnp.asarray(force_sync, jnp.float32),
         }
+        if partial:
+            metrics["participants"] = jnp.sum(mask).astype(jnp.float32)
         if return_delta:
             metrics["delta"] = delta
         return EF21PState(x=x_new, w=w_new, t=state.t + 1), metrics
@@ -96,8 +114,13 @@ def run(
     wire_mag: str = "fp32",
     transport=None,
     tracker=None,
+    participation=None,
 ):
     """Host loop driving the jitted round; returns history dict.
+
+    ``participation`` (a :class:`repro.fleet.ParticipationPlan`) restricts
+    each round's uplink aggregation to the plan's cohort — see
+    :func:`make_step`; ``hist["participants"]`` records cohort sizes.
 
     Stops after T rounds or when the per-worker downlink ``bit_budget``
     (paper App. A communication budgets) is exhausted. ``measure_wire=True``
@@ -145,11 +168,15 @@ def run(
         assert len(fleet) == problem.n, (len(fleet), problem.n)
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, comp, stepsize, return_delta=need_delta))
+    step = jax.jit(make_step(problem, comp, stepsize, return_delta=need_delta,
+                             participation=participation))
     state = init(problem.x0)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
             "w2s_bits": []}
+    partial = participation is not None and not participation.is_full
+    if partial:
+        hist["participants"] = []
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
@@ -201,6 +228,8 @@ def run(
             hist["gamma"].append(float(m["gamma"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
             hist["w2s_bits"].append(ledger.w2s_bits)
+            if partial:
+                hist["participants"].append(float(m["participants"]))
             if measure_wire:
                 hist["wire_bits"].append(wire_total)
             if tracker is not None:
@@ -211,6 +240,8 @@ def run(
                     "ef21p/s2w_bits": ledger.s2w_bits,
                     "ef21p/w2s_bits": ledger.w2s_bits,
                 }
+                if partial:
+                    rec["ef21p/participants"] = hist["participants"][-1]
                 if measure_wire:
                     rec["ef21p/wire_bits"] = wire_total
                 tracker.log(rec, step=t)

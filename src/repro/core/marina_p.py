@@ -99,26 +99,51 @@ def make_broadcast(mode: str, n: int, k: int):
 
 def make_step(
     problem: L1Problem, mode: str, k: int, p: float, stepsize: Stepsize,
-    *, return_q: bool = False,
+    *, return_q: bool = False, participation=None,
 ):
     """Build a jittable round: (state, key) -> (state, metrics).
 
     ``return_q=True`` additionally returns the per-worker messages Q [n, d]
     in the metrics so the host can serialize them (wire measurement path).
+
+    ``participation`` (a :class:`repro.fleet.ParticipationPlan`) masks the
+    uplink aggregation to the round's cohort: g, f_w and the Polyak aux
+    terms become cohort means, while the downlink still addresses every
+    worker (worker shifts must stay in sync for Algorithm 2's telescoping).
+    The plan key is folded off the main stream (§8.5/§9.2 discipline), so
+    the downlink RNG is bit-identical with and without a plan. An empty
+    cohort yields g = 0 and f_w = 0, so Polyak's gap/(B·||g||²) form
+    degrades to gamma = 0 (the iterate holds still) rather than NaN.
     """
     n = problem.n
     bcast, _ = make_broadcast(mode, n, k)
+    plan = participation
+    partial = plan is not None and not plan.is_full
+    if partial:
+        from repro.fleet.sampler import PARTICIPATION_FOLD
 
     def step(state: MarinaPState, key, force_sync=False):
         k_bern, k_comp = jax.random.split(key)
         # --- workers: subgradients at their own shifts -----------------------
         g_all = problem.subgrad_all(state.W)  # [n, d]
-        g = jnp.mean(g_all, axis=0)
-        aux = {
-            "f_w": jnp.mean(problem.f_all(state.W)),
-            "g_norm_sq": jnp.sum(g**2),
-            "g_sq_mean": jnp.mean(jnp.sum(g_all**2, axis=-1)),
-        }
+        f_all = problem.f_all(state.W)
+        if partial:
+            k_part = jax.random.fold_in(key, PARTICIPATION_FOLD)
+            mask = plan.mask(k_part, n, state.t)
+            wts = mask.astype(jnp.float32) / jnp.maximum(jnp.sum(mask), 1)
+            g = jnp.tensordot(wts, g_all, axes=1)
+            aux = {
+                "f_w": jnp.sum(wts * f_all),
+                "g_norm_sq": jnp.sum(g**2),
+                "g_sq_mean": jnp.sum(wts * jnp.sum(g_all**2, axis=-1)),
+            }
+        else:
+            g = jnp.mean(g_all, axis=0)
+            aux = {
+                "f_w": jnp.mean(f_all),
+                "g_norm_sq": jnp.sum(g**2),
+                "g_sq_mean": jnp.mean(jnp.sum(g_all**2, axis=-1)),
+            }
         gamma = stepsize(state.t, aux)
         x_new = state.x - gamma * g
         # --- downlink ---------------------------------------------------------
@@ -136,6 +161,8 @@ def make_step(
             "q_nnz_mean": jnp.mean(jnp.sum(Q != 0, axis=-1).astype(jnp.float32)),
             "drift": jnp.mean(jnp.sum((W_new - x_new) ** 2, axis=-1)),
         }
+        if partial:
+            metrics["participants"] = jnp.sum(mask).astype(jnp.float32)
         if return_q:
             metrics["Q"] = Q
             metrics["x_new"] = x_new
@@ -159,8 +186,13 @@ def run(
     wire_mag: str = "fp32",
     transport=None,
     tracker=None,
+    participation=None,
 ):
     """Host loop; stops on T rounds or per-worker downlink bit budget.
+
+    ``participation`` (a :class:`repro.fleet.ParticipationPlan`) restricts
+    each round's uplink aggregation to the plan's cohort — see
+    :func:`make_step`; ``hist["participants"]`` records cohort sizes.
 
     ``measure_wire=True`` additionally serializes every round's messages
     with the repro.wire codecs and tracks *measured* bits/worker next to a
@@ -208,11 +240,15 @@ def run(
         assert len(fleet) == problem.n, (len(fleet), problem.n)
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
-    step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=need_q))
+    step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=need_q,
+                             participation=participation))
     state = init(problem.x0, problem.n)
     key = jax.random.PRNGKey(seed)
     hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "s2w_bits": [],
             "w2s_bits": [], "drift": []}
+    partial = participation is not None and not participation.is_full
+    if partial:
+        hist["participants"] = []
     if measure_wire:
         hist["wire_bits"] = []
     wire_total = 0.0
@@ -275,6 +311,8 @@ def run(
             hist["drift"].append(float(m["drift"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
             hist["w2s_bits"].append(ledger.w2s_bits)
+            if partial:
+                hist["participants"].append(float(m["participants"]))
             if measure_wire:
                 hist["wire_bits"].append(wire_total)
             if tracker is not None:
@@ -287,6 +325,8 @@ def run(
                     "marina_p/w2s_bits": ledger.w2s_bits,
                     "marina_p/full_sync": full_sync,
                 }
+                if partial:
+                    rec["marina_p/participants"] = hist["participants"][-1]
                 if measure_wire:
                     rec["marina_p/wire_bits"] = wire_total
                 tracker.log(rec, step=t)

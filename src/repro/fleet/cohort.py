@@ -1,0 +1,359 @@
+"""Cohort-bounded federated rounds (DESIGN.md §9.3).
+
+``fleet_run`` drives MARINA-P or EF21-P over a declarative client
+population: each round a :class:`~repro.fleet.sampler.CohortSampler`
+draws a cohort of client ids, the cohort's problem data is materialized
+on demand (:meth:`FleetL1Problem.materialize`), and one jitted step vmaps
+the subgradient/compressor path over the cohort — so **cohort size, not
+population size, bounds memory**.
+
+Cross-device clients are stateless between the rounds they attend, which
+changes the downlink state machine vs the fixed-worker-list runs in
+``repro.core``:
+
+* a slot whose client is **fresh** (new to the cohort, or *dirty* from a
+  failed delivery last time it attended) first receives the current
+  server iterate dense — a *join sync*, charged dense bits;
+* a **persistent** slot (same client as last round, last message
+  delivered) holds valid state and receives only the compressed round
+  message (MARINA-P: ``Q_i(x^{t+1}-x^t)`` or the Bernoulli full sync;
+  EF21-P: the contractive shift delta);
+* a slot whose round message is **dropped** (per-client
+  :class:`~repro.transport.FaultSpec` drawn from the population's fault
+  rate, evaluated through the transport fault injector) keeps its stale
+  state and is marked dirty — its *next* attendance is a join sync. There
+  is no fleet-wide rollback or forced-sync promotion: with per-round
+  membership churn, the join sync already is the repair primitive
+  (contrast DESIGN.md §8.4's fixed-fleet two-phase commit).
+
+The global objective is estimated on a fixed hashed evaluation cohort
+(``FleetL1Problem.eval_cohort``) — evaluating the true population
+objective would require materializing every client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm_model import CommModel
+from repro.core.compressors import ContractiveCompressor, TopK
+from repro.core.marina_p import make_broadcast
+from repro.core.problems import paper_sign
+from repro.core.stepsizes import Stepsize
+
+from .population import FleetL1Problem
+from .sampler import CohortSampler
+
+
+def _cohort_oracles(A, points):
+    """(f_i, df_i) at per-slot points: [c,d,d] x [c,d] -> ([c], [c,d])."""
+    y = jnp.einsum("cij,cj->ci", A, points)
+    f = jnp.sum(jnp.abs(y), axis=-1)
+    g = jnp.einsum("cij,ci->cj", A, paper_sign(y))
+    return f, g
+
+
+def _aggregate(weights, f_all, g_all):
+    """Weighted cohort aggregation; weights are zero-sum on empty rounds,
+    so an empty cohort yields g = 0 and the server iterate holds still."""
+    g = jnp.tensordot(weights, g_all, axes=1)
+    aux = {
+        "f_w": jnp.sum(weights * f_all),
+        "g_norm_sq": jnp.sum(g**2),
+        "g_sq_mean": jnp.sum(weights * jnp.sum(g_all**2, axis=-1)),
+    }
+    return g, aux
+
+
+def make_marina_cohort_step(cohort_size: int, mode: str, k: int, p: float,
+                            stepsize: Stepsize):
+    """Jittable MARINA-P cohort round over [c] slots.
+
+    Inputs: server x [d], slot shifts W [c,d], cohort matrices A [c,d,d],
+    active/weights/fresh [c], key, round t. Fresh slots start from x (the
+    join sync already delivered it); the broadcast addresses every active
+    slot. Returns (x_new, W_new, w_start, metrics) — w_start is kept so
+    the host can roll back slots whose delivery failed.
+    """
+    bcast, _ = make_broadcast(mode, cohort_size, k)
+
+    def step(x, W, A, active, weights, fresh, key, t):
+        k_bern, k_comp = jax.random.split(key)
+        w_start = jnp.where(fresh[:, None], x[None, :], W)
+        f_all, g_all = _cohort_oracles(A, w_start)
+        g, aux = _aggregate(weights, f_all, g_all)
+        gamma = stepsize(t, aux)
+        x_new = x - gamma * g
+        coin = jax.random.bernoulli(k_bern, p)
+        Q = bcast(k_comp, x_new - x)  # [c, d]
+        W_round = jnp.where(coin, jnp.broadcast_to(x_new, W.shape), w_start + Q)
+        W_new = jnp.where(active[:, None], W_round, W)
+        metrics = {
+            "f_w": aux["f_w"],
+            "gamma": gamma,
+            "full_sync": coin.astype(jnp.float32),
+            "q_nnz": jnp.sum(Q != 0, axis=-1).astype(jnp.float32),
+            "x_new": x_new,
+            "Q": Q,
+        }
+        return x_new, W_new, w_start, metrics
+
+    return step
+
+
+def make_ef21p_cohort_step(comp: ContractiveCompressor, stepsize: Stepsize):
+    """Jittable EF21-P cohort round: the shift w is a single server-side
+    vector; fresh slots received it dense at round start, so the whole
+    active cohort computes at w and the compressed delta keeps the
+    persistent slots synchronized."""
+
+    def step(x, w, A, active, weights, key, t):
+        points = jnp.broadcast_to(w, A.shape[:1] + w.shape)
+        f_all, g_all = _cohort_oracles(A, points)
+        g, aux = _aggregate(weights, f_all, g_all)
+        gamma = stepsize(t, aux)
+        x_new = x - gamma * g
+        delta = comp(key, x_new - w)
+        w_new = w + delta
+        metrics = {
+            "f_w": aux["f_w"],
+            "gamma": gamma,
+            "delta_nnz": jnp.sum(delta != 0).astype(jnp.float32),
+            "delta": delta,
+        }
+        return x_new, w_new, metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class ParticipationStats:
+    """Fleet-level participation/goodput counters for one run."""
+
+    rounds: int = 0
+    participant_rounds: int = 0
+    fresh_rounds: int = 0
+    messages_sent: int = 0
+    messages_delivered: int = 0
+    unique_clients: int = 0
+    mean_fill: float = 0.0
+
+    @property
+    def fresh_frac(self) -> float:
+        return self.fresh_rounds / max(self.participant_rounds, 1)
+
+    @property
+    def goodput(self) -> float:
+        return self.messages_delivered / max(self.messages_sent, 1)
+
+    def as_metrics(self, prefix: str = "fleet") -> Dict[str, float]:
+        return {
+            f"{prefix}/rounds": float(self.rounds),
+            f"{prefix}/participant_rounds": float(self.participant_rounds),
+            f"{prefix}/unique_clients": float(self.unique_clients),
+            f"{prefix}/mean_fill": self.mean_fill,
+            f"{prefix}/fresh_frac": self.fresh_frac,
+            f"{prefix}/goodput": self.goodput,
+        }
+
+
+def fleet_run(
+    problem: FleetL1Problem,
+    sampler: CohortSampler,
+    stepsize: Stepsize,
+    *,
+    algorithm: str = "marina_p",
+    mode: str = "perm",
+    k: Optional[int] = None,
+    p: Optional[float] = None,
+    comp: Optional[ContractiveCompressor] = None,
+    T: int = 200,
+    target: Optional[float] = None,
+    seed: int = 0,
+    record_every: int = 1,
+    measure_wire: bool = False,
+    wire_mag: str = "fp32",
+    eval_clients: int = 64,
+    tracker=None,
+):
+    """Host loop for one (algorithm × sampler × population) scenario.
+
+    Downlink bits follow the paper's 64-bit CommModel: every fresh active
+    slot is charged one dense join sync; MARINA-P sync rounds charge dense
+    per active slot, otherwise each slot's actual message nnz; EF21-P
+    charges the delta nnz per persistent slot. Uplink stays one exact
+    dense message per participant per round. ``measure_wire=True``
+    additionally serializes every per-slot message with the repro.wire
+    codecs (``hist["wire_bits"]``, DESIGN.md §3.5).
+
+    ``target`` (an f-value on the evaluation cohort) sets
+    ``hist["rounds_to_target"]`` — the first recorded round at or below
+    it, or T when never reached (keeps BENCH gates NaN-free).
+    """
+    assert algorithm in ("marina_p", "ef21p"), algorithm
+    spec = problem.spec
+    c, d = sampler.cohort_size, problem.d
+    k = k if k is not None else max(1, d // c)
+    p = p if p is not None else k / d
+    if comp is None:
+        comp = TopK(k=k)
+    cm = CommModel(d=d)
+    if measure_wire:
+        from repro import wire
+
+    # -- evaluation cohort (fixed, hashed) --------------------------------
+    eval_ids = problem.eval_cohort(eval_clients)
+    A_eval = jnp.asarray(problem.materialize(eval_ids), jnp.float32)
+
+    @jax.jit
+    def f_eval(x):
+        return jnp.mean(jnp.sum(jnp.abs(jnp.einsum("cij,j->ci", A_eval, x)), axis=-1))
+
+    if algorithm == "marina_p":
+        step = jax.jit(make_marina_cohort_step(c, mode, k, p, stepsize))
+    else:
+        step = jax.jit(make_ef21p_cohort_step(comp, stepsize))
+
+    x = jnp.asarray(problem.x0, jnp.float32)
+    W = jnp.broadcast_to(x, (c, d))  # marina_p slot shifts
+    w = x                            # ef21p server shift
+    key = jax.random.PRNGKey(seed)
+
+    prev_ids = np.full(c, -1, dtype=np.int64)
+    dirty: set = set()
+    clients_seen: set = set()
+    stats = ParticipationStats()
+    s2w_bits = 0.0
+    w2s_bits = 0.0
+    join_bits = 0.0
+    wire_bits = 0.0
+    rounds_to_target = None
+    hist = {"t": [], "f_x": [], "f_w": [], "gamma": [], "participants": [],
+            "fresh": [], "delivered": [], "s2w_bits": [], "w2s_bits": []}
+    if measure_wire:
+        hist["wire_bits"] = []
+
+    for t in range(T):
+        co = sampler.cohort(t)
+        fresh_np = co.active & (
+            (co.ids != prev_ids) | np.isin(co.ids, np.asarray(sorted(dirty), dtype=np.int64))
+        )
+        A = jnp.asarray(problem.materialize(co.ids), jnp.float32)
+        active = jnp.asarray(co.active)
+        weights = jnp.asarray(co.weights, jnp.float32)
+        key, sub = jax.random.split(key)
+
+        if algorithm == "marina_p":
+            x, W, w_start, m = step(x, W, A, active, weights,
+                                    jnp.asarray(fresh_np), sub, t)
+            coin = float(m["full_sync"]) > 0
+            q_nnz = np.asarray(m["q_nnz"])
+        else:
+            x, w, m = step(x, w, A, active, weights, sub, t)
+            coin = False
+            delta_nnz = float(m["delta_nnz"])
+
+        # -- per-slot delivery through the transport failure model ---------
+        n_active = co.n_active
+        delivered = co.active.copy()
+        payloads = [None] * c
+        if measure_wire or spec.fault_rate > 0:
+            for i in np.nonzero(co.active)[0]:
+                if measure_wire:
+                    if algorithm == "marina_p":
+                        buf = (wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
+                               if coin else
+                               wire.encode_sparse(np.asarray(m["Q"][i]), mag=wire_mag))
+                    else:
+                        buf = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+                    if fresh_np[i]:
+                        join_payload = wire.encode_dense(
+                            np.asarray(x if algorithm == "marina_p" else w), mag=wire_mag)
+                        wire_bits += wire.measured_bits(join_payload)
+                    wire_bits += wire.measured_bits(buf)
+                    payloads[i] = buf
+                if spec.fault_rate > 0:
+                    from repro.transport import FaultInjector
+
+                    fspec = spec.fault_spec_for(int(co.ids[i]), round_salt=t)
+                    if fspec.any_faults:
+                        inj = FaultInjector(fspec)
+                        buf = payloads[i] if payloads[i] is not None else b"\x00" * 16
+                        delivered[i] = len(inj.plan(buf)) > 0
+
+        # slots whose round message was dropped keep their pre-round state
+        # and resync (join dense) at their next attendance
+        if algorithm == "marina_p" and not bool(delivered.all()):
+            W = jnp.where(jnp.asarray(delivered)[:, None], W, w_start)
+        for i in np.nonzero(co.active)[0]:
+            cid = int(co.ids[i])
+            if delivered[i]:
+                dirty.discard(cid)
+            else:
+                dirty.add(cid)
+        prev_ids = np.where(co.active, co.ids, -1)
+
+        # -- bit accounting (paper 64-bit model) ----------------------------
+        n_fresh = int(fresh_np.sum())
+        join_bits += cm.dense_bits() * n_fresh
+        round_s2w = cm.dense_bits() * n_fresh
+        if algorithm == "marina_p":
+            if coin:
+                round_s2w += cm.dense_bits() * n_active
+            else:
+                round_s2w += float(sum(cm.sparse_bits(float(q_nnz[i]))
+                                       for i in np.nonzero(co.active)[0]))
+        else:
+            n_persistent = n_active - n_fresh
+            round_s2w += cm.sparse_bits(delta_nnz) * n_persistent
+        s2w_bits += round_s2w
+        w2s_bits += cm.dense_bits() * n_active
+
+        # -- stats / recording ---------------------------------------------
+        stats.rounds += 1
+        stats.participant_rounds += n_active
+        stats.fresh_rounds += n_fresh
+        stats.messages_sent += n_active
+        stats.messages_delivered += int(delivered.sum())
+        stats.mean_fill += (co.fill - stats.mean_fill) / stats.rounds
+        clients_seen.update(int(i) for i in co.ids[co.active])
+
+        fx = float(f_eval(x))
+        if target is not None and rounds_to_target is None and fx <= target:
+            rounds_to_target = t
+        if t % record_every == 0 or t == T - 1:
+            hist["t"].append(t)
+            hist["f_x"].append(fx)
+            hist["f_w"].append(float(m["f_w"]))
+            hist["gamma"].append(float(m["gamma"]))
+            hist["participants"].append(n_active)
+            hist["fresh"].append(n_fresh)
+            hist["delivered"].append(int(delivered.sum()))
+            hist["s2w_bits"].append(s2w_bits)
+            hist["w2s_bits"].append(w2s_bits)
+            if measure_wire:
+                hist["wire_bits"].append(wire_bits)
+            if tracker is not None:
+                pre = f"fleet/{algorithm}"
+                tracker.log({f"{pre}/f_x": fx, f"{pre}/gamma": hist["gamma"][-1],
+                             f"{pre}/participants": n_active,
+                             f"{pre}/s2w_bits": s2w_bits}, step=t)
+
+    stats.unique_clients = len(clients_seen)
+    hist["final_x"] = x
+    hist["s2w_bits_total"] = s2w_bits
+    hist["w2s_bits_total"] = w2s_bits
+    hist["join_bits_total"] = join_bits
+    hist["bits_per_participant_round"] = s2w_bits / max(stats.participant_rounds, 1)
+    if measure_wire:
+        hist["wire_bits_total"] = wire_bits
+    hist["participation"] = stats
+    if target is not None:
+        hist["rounds_to_target"] = rounds_to_target if rounds_to_target is not None else T
+    if tracker is not None:
+        tracker.log(stats.as_metrics(f"fleet/{algorithm}"), step=T)
+    return hist

@@ -38,8 +38,9 @@ class TrainerConfig:
     window_override: Optional[int] = None
     remat_policy: Optional[str] = None    # None/"full" | "dots" (§Perf C2)
     act_spec: Any = None                  # within-worker activation spec (§Perf C3)
-    drop_prob: float = 0.0                # per-round worker drop probability
-    straggler_cutoff: float = 0.0         # >0: drop workers with Exp(1) latency above it
+    drop_prob: float = 0.0                # legacy shim over BernoulliStragglerPlan
+    straggler_cutoff: float = 0.0         # legacy shim over BernoulliStragglerPlan
+    participation: Any = None             # repro.fleet ParticipationPlan (None = full)
 
 
 def init_state(cfg: ModelConfig, tcfg: TrainerConfig, downlink, optimizer: Optimizer, key):
@@ -80,7 +81,22 @@ def make_train_step(
 
     grad_fn = jax.value_and_grad(loss_of)
 
-    partial = tcfg.drop_prob > 0 or tcfg.straggler_cutoff > 0
+    # Participation is a single pluggable hook (repro.fleet.ParticipationPlan).
+    # The legacy drop_prob/straggler_cutoff knobs are thin shims over
+    # BernoulliStragglerPlan — op-for-op identical to the old inline branch,
+    # so legacy configs stay bit-identical to their plan equivalents.
+    from repro.fleet.sampler import PARTICIPATION_FOLD, plan_from_legacy
+
+    plan = tcfg.participation
+    if plan is not None and (tcfg.drop_prob > 0 or tcfg.straggler_cutoff > 0):
+        raise ValueError(
+            "TrainerConfig.participation and the legacy drop_prob/"
+            "straggler_cutoff knobs are mutually exclusive; the legacy knobs "
+            "are shims over BernoulliStragglerPlan — set one or the other."
+        )
+    if plan is None:
+        plan = plan_from_legacy(tcfg.drop_prob, tcfg.straggler_cutoff)
+    partial = not plan.is_full
 
     def train_step(state, batch, key, force_sync=False):
         server = state["server"]
@@ -94,23 +110,17 @@ def make_train_step(
             workers = state["workers"]
             losses, grads_w = jax.vmap(grad_fn)(workers, batch)
         # ---- uplink: exact aggregation over the round's participants ---------
-        # Partial participation (DESIGN.md §8.5): each round a worker sits out
-        # with probability drop_prob, and/or when its Exp(1) latency draw
-        # exceeds straggler_cutoff (the server's straggler deadline). Only the
-        # uplink aggregation is masked — the downlink still addresses everyone.
-        # The participation key is folded off to the side so the downlink RNG
-        # stream is bit-identical to the drop_prob=0 path.
+        # Partial participation (DESIGN.md §8.5/§9.2): the plan maps a
+        # participation key to this round's worker mask. Only the uplink
+        # aggregation is masked — the downlink still addresses everyone.
+        # The participation key is folded off to the side
+        # (fold_in(key, PARTICIPATION_FOLD)) so the downlink RNG stream is
+        # bit-identical to the full-participation path, and every plan draws
+        # from the same folded key so swapping plans never perturbs it.
         if partial:
             n = tcfg.n_workers
-            k_part = jax.random.fold_in(key, 0x5052)
-            k_drop, k_lat = jax.random.split(k_part)
-            participate = jnp.ones((n,), bool)
-            if tcfg.drop_prob > 0:
-                participate &= jax.random.uniform(k_drop, (n,)) >= tcfg.drop_prob
-            if tcfg.straggler_cutoff > 0:
-                participate &= (
-                    jax.random.exponential(k_lat, (n,)) <= tcfg.straggler_cutoff
-                )
+            k_part = jax.random.fold_in(key, PARTICIPATION_FOLD)
+            participate = plan.mask(k_part, n, state["step"])
             n_part = jnp.maximum(jnp.sum(participate), 1)
             w = participate.astype(jnp.float32) / n_part
             grads = jax.tree.map(

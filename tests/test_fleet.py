@@ -1,0 +1,317 @@
+"""repro.fleet: populations, samplers, cohort runs, participation plans."""
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import ef21p, marina_p, problems, stepsizes
+from repro.core.compressors import TopK
+from repro.data import SyntheticLMData
+from repro.fleet import (
+    AvailabilityWindowPlan,
+    BernoulliStragglerPlan,
+    CyclingMaskPlan,
+    FleetL1Problem,
+    FullParticipation,
+    fleet_run,
+    make_fleet,
+    make_sampler,
+    plan_from_legacy,
+)
+from repro.optim import make_optimizer
+from repro.optim.schedules import constant_lr
+from repro.train import TrainerConfig, init_state, make_downlink, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# population
+# ---------------------------------------------------------------------------
+
+
+def test_population_attributes_deterministic_and_stateless():
+    spec = make_fleet("two_tier", 1_000_000, seed=11)
+    ids = np.asarray([0, 17, 999_999, 123_456])
+    assert (spec.tier_index(ids) == spec.tier_index(ids)).all()
+    assert np.allclose(spec.data_size(ids), spec.data_size(ids))
+    # order/batching must not matter (pure per-id hashing)
+    one_by_one = np.concatenate([spec.data_size(np.asarray([i])) for i in ids])
+    assert np.allclose(spec.data_size(ids), one_by_one)
+    # different seeds decorrelate
+    other = make_fleet("two_tier", 1_000_000, seed=12)
+    assert not (spec.tier_index(np.arange(200)) == other.tier_index(np.arange(200))).all()
+
+
+def test_tier_fractions_match_weights():
+    spec = make_fleet("two_tier", 4096, seed=0)
+    frac_dc = spec.tier_index(np.arange(4096)).mean()  # tier 1 = "dc", weight 0.3
+    assert abs(frac_dc - 0.3) < 0.05
+
+
+def test_availability_trace_duty_cycle():
+    spec = make_fleet("two_tier_diurnal", 2048, seed=0)
+    ids = np.arange(2048)
+    open_frac = np.mean([spec.available(ids, t).mean() for t in range(24)])
+    assert abs(open_frac - 0.5) < 0.05
+    # each client's own window is exactly duty * period ticks long
+    avail_t = np.stack([spec.available(ids[:32], t) for t in range(24)])
+    assert (avail_t.sum(axis=0) == spec.availability.open_ticks).all()
+
+
+def test_fault_spec_plugs_into_transport():
+    from repro.transport import FaultInjector, FaultSpec
+
+    spec = make_fleet("flaky_mobile", 10_000, seed=2)
+    fs = spec.fault_spec_for(1234, round_salt=5)
+    assert isinstance(fs, FaultSpec) and fs.any_faults
+    assert fs == spec.fault_spec_for(1234, round_salt=5)  # deterministic
+    assert fs != spec.fault_spec_for(1234, round_salt=6)  # fresh stream per round
+    plans = FaultInjector(fs).plan(b"\x00" * 16)
+    assert isinstance(plans, list)
+    # clean mix has no faults at all
+    clean = make_fleet("uniform", 100, seed=0).fault_spec_for(7)
+    assert not clean.any_faults
+
+
+def test_fleet_problem_analytic_eigs_match_numpy():
+    spec = make_fleet("two_tier", 50_000, seed=4)
+    prob = FleetL1Problem(spec, d=12)
+    ids = np.asarray([3, 999, 42_000])
+    A = prob.materialize(ids)
+    L_analytic = prob.client_L0(ids)
+    L_numpy = np.asarray([np.abs(np.linalg.eigvalsh(a)).max() for a in A])
+    assert np.allclose(L_analytic, L_numpy, rtol=1e-10)
+    assert prob.f_star == 0.0 and prob.R0_sq > 0
+
+
+# ---------------------------------------------------------------------------
+# cohort samplers
+# ---------------------------------------------------------------------------
+
+
+def test_samplers_deterministic_and_distinct_per_round():
+    spec = make_fleet("uniform", 100_000, seed=0)
+    for kind in ("uniform", "weighted", "availability", "deadline:2.0"):
+        s = make_sampler(kind, spec, 16, seed=9)
+        a, b = s.cohort(3), s.cohort(3)
+        assert (a.ids == b.ids).all() and (a.active == b.active).all(), kind
+        c = s.cohort(4)
+        assert not (a.ids == c.ids).all(), kind  # fresh draw each round
+        act = a.weights[a.active]
+        if a.n_active:
+            assert np.isclose(a.weights.sum(), 1.0) and (act > 0).all()
+        assert (a.weights[~a.active] == 0).all()
+
+
+def test_size_weighted_sampler_biases_toward_large_clients():
+    spec = make_fleet("two_tier", 20_000, seed=1)  # dc tier: 4x median size
+    s = make_sampler("weighted", spec, 64, seed=0)
+    picked = np.concatenate([s.cohort(t).ids[s.cohort(t).active] for t in range(20)])
+    frac_dc = (spec.tier_index(picked) == 1).mean()
+    assert frac_dc > 0.45  # population fraction is 0.30; size-weighting lifts it
+
+
+def test_availability_sampler_respects_windows():
+    spec = make_fleet("two_tier_diurnal", 8192, seed=3)
+    s = make_sampler("availability", spec, 32, seed=0)
+    for t in (0, 7, 13):
+        co = s.cohort(t)
+        assert spec.available(co.ids[co.active], t).all()
+
+
+def test_deadline_sampler_deactivates_stragglers():
+    spec = make_fleet("two_tier_diurnal", 8192, seed=3)  # latency_sigma 0.6
+    s = make_sampler("deadline:1.0", spec, 64, seed=0)
+    co = s.cohort(0)
+    assert 0 < co.n_active < 64  # median latency 1.0 => roughly half miss
+    assert (spec.latency(co.ids, 0)[co.active] <= 1.0).all()
+
+
+def test_cohort_memory_bounded_by_cohort_not_population():
+    """A 100k-client population must never materialize population-sized
+    state: one 64-client round stays under a few MB of host allocations
+    (the [population, d, d] tensor alone would be ~200 MB)."""
+    spec = make_fleet("two_tier_diurnal", 100_000, seed=0)
+    prob = FleetL1Problem(spec, d=16)
+    sampler = make_sampler("uniform", spec, 64, seed=0)
+    fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05), T=1, seed=0)  # warm up jit
+    tracemalloc.start()
+    fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05), T=3, seed=0)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 32 * 1024 * 1024, f"peak host alloc {peak/1e6:.1f} MB"
+
+
+# ---------------------------------------------------------------------------
+# fleet_run
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_run_marina_converges_and_is_deterministic():
+    spec = make_fleet("two_tier", 4096, seed=0)
+    prob = FleetL1Problem(spec, d=32)
+    sampler = make_sampler("uniform", spec, 8, seed=1)
+    h1 = fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05),
+                   algorithm="marina_p", mode="perm", T=60, target=None, seed=0)
+    h2 = fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05),
+                   algorithm="marina_p", mode="perm", T=60, target=None, seed=0)
+    assert h1["f_x"] == h2["f_x"]
+    assert h1["f_x"][-1] < 0.5 * h1["f_x"][0]
+    assert h1["s2w_bits_total"] > 0 and h1["w2s_bits_total"] > 0
+    assert h1["participation"].unique_clients <= 60 * 8
+
+
+def test_fleet_run_ef21p_converges_with_polyak():
+    spec = make_fleet("uniform", 2048, seed=0)
+    prob = FleetL1Problem(spec, d=32)
+    sampler = make_sampler("uniform", spec, 8, seed=1)
+    h = fleet_run(prob, sampler, stepsizes.EF21PPolyak(alpha=4 / 32),
+                  algorithm="ef21p", k=4, T=80, target=None, seed=0)
+    assert np.isfinite(h["f_x"]).all()
+    assert h["f_x"][-1] < 0.7 * h["f_x"][0]
+
+
+def test_fleet_run_rounds_to_target_ceiling():
+    spec = make_fleet("uniform", 512, seed=0)
+    prob = FleetL1Problem(spec, d=16)
+    sampler = make_sampler("uniform", spec, 4, seed=0)
+    h = fleet_run(prob, sampler, stepsizes.Constant(gamma=1e-9), T=5, target=1e-12)
+    assert h["rounds_to_target"] == 5  # never reached -> T, not NaN/None
+
+
+def test_fleet_run_faults_degrade_but_stay_finite():
+    spec = make_fleet("flaky_mobile", 4096, seed=7)
+    prob = FleetL1Problem(spec, d=16)
+    sampler = make_sampler("uniform", spec, 8, seed=2)
+    h = fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05),
+                  algorithm="marina_p", T=40, seed=0)
+    stats = h["participation"]
+    assert stats.goodput < 1.0  # some frames dropped
+    assert stats.fresh_frac > 0  # dropped clients resync on return
+    assert np.isfinite(h["f_x"]).all()
+    assert h["f_x"][-1] < h["f_x"][0]
+
+
+def test_fleet_run_wire_measurement_close_to_analytic():
+    spec = make_fleet("uniform", 1024, seed=0)
+    prob = FleetL1Problem(spec, d=64)
+    sampler = make_sampler("uniform", spec, 8, seed=1)
+    h = fleet_run(prob, sampler, stepsizes.Constant(gamma=0.05),
+                  algorithm="marina_p", mode="perm", T=20, measure_wire=True)
+    # fp32 wire vs 64-bit analytic model: same order of magnitude
+    assert 0 < h["wire_bits_total"] < h["s2w_bits_total"]
+
+
+# ---------------------------------------------------------------------------
+# ParticipationPlan in core runs (Polyak safety under partial participation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_prob():
+    return problems.generate_problem(n=4, d=16, noise_scale=1.0, seed=0)
+
+
+def test_full_plan_bit_identical_to_no_plan(small_prob):
+    kw = dict(mode="perm", k=4, p=0.25, stepsize=stepsizes.Constant(gamma=0.05),
+              T=25, seed=1)
+    h0 = marina_p.run(small_prob, **kw)
+    h1 = marina_p.run(small_prob, participation=FullParticipation(), **kw)
+    assert h0["f_x"] == h1["f_x"]
+    assert (np.asarray(h0["final_state"].x) == np.asarray(h1["final_state"].x)).all()
+
+
+@pytest.mark.parametrize("alg", ["marina_p", "ef21p"])
+def test_polyak_finite_on_empty_and_singleton_cohorts(small_prob, alg):
+    """EF21PPolyak / MarinaPPolyak aux path: an empty round must give
+    gamma = 0 (iterate holds still), a size-1 round a finite positive step."""
+    n = small_prob.n
+    plan = CyclingMaskPlan(masks=(
+        (False,) * n,                       # t = 0: empty
+        (True,) + (False,) * (n - 1),       # t = 1: singleton
+        (True,) * n,                        # t = 2: full
+    ))
+    if alg == "marina_p":
+        ss = stepsizes.MarinaPPolyak(omega=3.0, p=0.25, f_star=0.0)
+        h = marina_p.run(small_prob, mode="perm", k=4, p=0.25, stepsize=ss,
+                         T=30, seed=1, participation=plan)
+        x0 = small_prob.x0
+    else:
+        ss = stepsizes.EF21PPolyak(alpha=0.25, f_star=0.0)
+        h = ef21p.run(small_prob, TopK(k=4), ss, T=30, seed=1, participation=plan)
+        x0 = small_prob.x0
+    assert np.isfinite(h["f_x"]).all() and np.isfinite(h["gamma"]).all()
+    assert h["participants"][:3] == [0.0, 1.0, float(n)]
+    # empty round: gamma = 0 and x unchanged (f_x[0] = f(x0))
+    assert h["gamma"][0] == 0.0
+    assert np.isclose(h["f_x"][0], float(small_prob.f(jnp.asarray(x0))), rtol=1e-6)
+    # singleton round: monotone-safe — finite, non-negative step
+    assert h["gamma"][1] >= 0.0 and np.isfinite(h["gamma"][1])
+
+
+def test_plan_participants_recorded(small_prob):
+    h = marina_p.run(small_prob, mode="ind", k=4, p=0.25,
+                     stepsize=stepsizes.Constant(gamma=0.05), T=20, seed=1,
+                     participation=BernoulliStragglerPlan(drop_prob=0.3))
+    assert "participants" in h
+    assert min(h["participants"]) >= 0 and max(h["participants"]) <= small_prob.n
+    assert min(h["participants"]) < small_prob.n  # drops actually happen
+
+
+# ---------------------------------------------------------------------------
+# trainer: plan hook + legacy shim bit-identity (§8.5 key discipline)
+# ---------------------------------------------------------------------------
+
+
+def _train(tcfg, steps=4):
+    cfg = configs.get_smoke("gemma-2b")
+    dl = make_downlink("marina:perm", tcfg.n_workers)
+    opt = make_optimizer("sgd")
+    state = init_state(cfg, tcfg, dl, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg, dl, opt, constant_lr(2e-3)))
+    data = SyntheticLMData(cfg, tcfg.n_workers, 2, 64)
+    losses = []
+    for i in range(steps):
+        state, m = step(state, data.batch(i), jax.random.fold_in(jax.random.PRNGKey(9), i))
+        losses.append(float(m["loss"]))
+    return state, losses, m
+
+
+def test_trainer_legacy_knobs_bit_identical_to_plan():
+    """Identical seeds must give identical cohorts — and therefore
+    bit-identical trajectories — via the legacy shim or the explicit plan."""
+    legacy = TrainerConfig(n_workers=2, attn_chunk=32, drop_prob=0.4)
+    plan = TrainerConfig(n_workers=2, attn_chunk=32,
+                         participation=BernoulliStragglerPlan(drop_prob=0.4))
+    s1, l1, m1 = _train(legacy)
+    s2, l2, m2 = _train(plan)
+    assert l1 == l2
+    for a, b in zip(jax.tree.leaves(s1["server"]), jax.tree.leaves(s2["server"])):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert float(m1["participants"]) == float(m2["participants"])
+
+
+def test_trainer_availability_plan_smoke():
+    tcfg = TrainerConfig(n_workers=2, attn_chunk=32,
+                         participation=AvailabilityWindowPlan(
+                             phases=(0, 12), period=24, open_ticks=12))
+    _, losses, m = _train(tcfg)
+    assert np.isfinite(losses).all()
+    assert float(m["participants"]) == 1.0  # anti-phased: one worker per round
+
+
+def test_trainer_conflicting_participation_config_raises():
+    cfg = configs.get_smoke("gemma-2b")
+    tcfg = TrainerConfig(n_workers=2, drop_prob=0.1,
+                         participation=BernoulliStragglerPlan(drop_prob=0.1))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        make_train_step(cfg, tcfg, None, make_optimizer("sgd"), constant_lr(1e-2))
+
+
+def test_plan_from_legacy_mapping():
+    assert plan_from_legacy(0.0, 0.0).is_full
+    p = plan_from_legacy(0.2, 1.5)
+    assert isinstance(p, BernoulliStragglerPlan)
+    assert p.drop_prob == 0.2 and p.straggler_cutoff == 1.5 and not p.is_full
