@@ -15,6 +15,8 @@ and regression gates for ``benchmarks/bench_diff.py``. Modules:
                                 with measured-vs-analytic parity checks)
   transport_bench    DESIGN §8  frame/CRC throughput + clean-vs-degraded
                                 MARINA-P chaos run (goodput, rounds_ratio)
+  serve_bench        DESIGN §10 DecodeEngine prefill/decode span p50/p99
+                                latency + tokens/s (smoke config)
   scenario_matrix    DESIGN §9  (algorithm x stepsize x client-mix) fleet
                                 cells, one BENCH_scenario_<cell>.json each
   roofline_report    §Roofline  dominant-term bound per (arch x shape) dry-run
@@ -58,6 +60,14 @@ GATES = {
         # degraded rounds-to-target / clean rounds-to-target
         {"pattern": "transport/rounds_ratio", "field": "value", "direction": "lower", "rtol": 0.5},
     ],
+    "serve": [
+        _TIME,
+        # span-derived request latency percentiles (ms, lower is better);
+        # slack matches _TIME — CI machines vary widely on wall-clock
+        {"pattern": "serve/*_ms", "field": "value", "direction": "lower", "rtol": 4.0},
+        # decode throughput from the same spans (higher is better)
+        {"pattern": "serve/tokens_per_s", "field": "value", "direction": "higher", "rtol": 0.8},
+    ],
     "scenario": [
         _TIME,
         # convergence speed per matrix cell (deterministic for a fixed seed;
@@ -78,6 +88,7 @@ def main(argv=None) -> int:
         kernel_bench,
         roofline_report,
         scenario_matrix,
+        serve_bench,
         stepsize_grid,
         table2_sigma,
         transport_bench,
@@ -94,6 +105,7 @@ def main(argv=None) -> int:
         "wire": wire_bench.bench,
         "roofline": roofline_report.bench,
         "transport": transport_bench.bench,
+        "serve": serve_bench.bench,
         # per-cell artifacts land next to the suite artifact (args.out is
         # bound at call time, after parsing)
         "scenario": lambda tracker=None: scenario_matrix.bench(
@@ -116,7 +128,7 @@ def main(argv=None) -> int:
     selected = list(args.suites)
     if not selected:
         selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels",
-                    "wire", "transport", "scenario"]
+                    "wire", "transport", "serve", "scenario"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
 

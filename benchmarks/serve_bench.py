@@ -1,0 +1,85 @@
+"""Serve latency benchmark: prefill/decode p50/p99 + tokens/s gates.
+
+Drives :class:`repro.serve.DecodeEngine` on the gemma-2b smoke config for a
+fixed request schedule and reduces the emitted ``serve/request`` span tree
+(DESIGN.md §10) to gateable scalars:
+
+  serve/prefill_p50_ms / serve/prefill_p99_ms
+  serve/decode_p50_ms  / serve/decode_p99_ms
+  serve/tokens_per_s
+
+The percentiles come from the span durations (linear interpolation —
+repro.obs.hist), not wall-clock re-timing, so the benchmark exercises the
+same event stream the analyzer consumes. This closes the ROADMAP follow-up
+"extend gates to serve-latency p50/p99": the committed
+``benchmarks/baselines/BENCH_serve.json`` carries lower-is-better latency
+gates and a higher-is-better tokens/s gate for benchmarks/bench_diff.py.
+
+Usage: PYTHONPATH=src python benchmarks/serve_bench.py
+       (or via the harness: python -m benchmarks.run serve)
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import configs, obs
+from repro.models import lm
+from repro.obs import analyze
+from repro.obs.hist import percentile
+from repro.serve import DecodeEngine
+
+N_REQUESTS = 12
+BATCH = 2
+PROMPT_LEN = 8
+NEW_TOKENS = 16
+
+
+def _span_durations(events, name):
+    return sorted(
+        float(e["t1"]) - float(e["t0"])
+        for e in analyze.span_events(events)
+        if e["name"] == name
+    )
+
+
+def bench(tracker=None):
+    cfg = configs.get_smoke("gemma-2b")
+    params = lm.lm_init(cfg, jax.random.PRNGKey(0))
+    mem = obs.MemoryTracker()
+    # span/timer events also stream into the harness sink (span/* timers in
+    # the BENCH artifact) while the local MemoryTracker feeds the reduction
+    eng_tracker = obs.CompositeTracker(mem, tracker) if tracker is not None else mem
+    eng = DecodeEngine(cfg, params, cache_len=PROMPT_LEN + NEW_TOKENS,
+                       batch_size=BATCH, tracker=eng_tracker)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (BATCH, PROMPT_LEN), 0, cfg.vocab_size
+    )
+    eng.run(prompts, n_new_tokens=NEW_TOKENS)  # compile warm-up
+    warm = len(mem.events)
+    for i in range(N_REQUESTS):
+        eng.run(prompts, n_new_tokens=NEW_TOKENS, seed=i)
+    events = mem.events[warm:]
+
+    rows = []
+    for phase in ("prefill", "decode"):
+        durs = _span_durations(events, phase)
+        assert len(durs) == N_REQUESTS, (phase, len(durs))
+        for q, tag in ((0.50, "p50"), (0.99, "p99")):
+            ms = percentile(durs, q) * 1e3
+            rows.append((f"serve/{phase}_{tag}_ms", ms * 1e3, round(ms, 4)))
+    toks = sorted(
+        float(e["attrs"]["tokens_per_s"])
+        for e in analyze.span_events(events)
+        if e["name"] == "serve/request"
+    )
+    assert len(toks) == N_REQUESTS
+    decode_durs = _span_durations(events, "decode")
+    rows.append(("serve/tokens_per_s", percentile(decode_durs, 0.50) * 1e6,
+                 round(percentile(toks, 0.50), 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,56 @@
+"""Seeded chaos training run emitting a JSONL span trace (CI trace-smoke).
+
+Drives MARINA-P on the paper's L1 workload through a fault-injected fleet
+(drop + straggler — the acceptance chaos model for the trace pipeline) with
+a :class:`repro.obs.JsonlTracker` attached, so the log carries the full
+round/subgrad/stepsize/broadcast/link span tree (DESIGN.md §10). CI then
+feeds the log to ``python -m repro.obs.analyze`` to validate the spans,
+export a Perfetto trace, and require at least one degraded round to be
+attributed to a specific worker link.
+
+Deterministic: the fault injectors, the algorithm, and the span ids are all
+seeded, so two runs produce structurally identical span trees (timestamps
+aside) — tests/test_trace.py asserts exactly that.
+
+Usage: PYTHONPATH=src python benchmarks/trace_smoke.py --out runs/trace/run.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro import obs
+from repro.core import marina_p, problems, stepsizes
+from repro.transport import FaultSpec
+
+CHAOS_SPEC = FaultSpec(drop=0.15, straggler=0.2, straggler_ticks=3, seed=7)
+ROUNDS = 24
+
+
+def run(out: str, *, rounds: int = ROUNDS, seed: int = 1) -> str:
+    prob = problems.generate_problem(n=8, d=64, noise_scale=1.0, seed=0)
+    k = prob.d // prob.n
+    p = k / prob.d
+    ss = stepsizes.MarinaPPolyak(omega=prob.n - 1, p=p, f_star=prob.f_star)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    tr = obs.JsonlTracker(out)
+    marina_p.run(prob, mode="perm", k=k, p=p, stepsize=ss, T=rounds,
+                 seed=seed, transport=CHAOS_SPEC, tracker=tr)
+    tr.finish()
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="runs/trace/run.jsonl")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args(argv)
+    path = run(args.out, rounds=args.rounds, seed=args.seed)
+    n_spans = sum(1 for e in obs.read_jsonl(path) if e.get("kind") == "span")
+    print(f"wrote {path} ({n_spans} span events over {args.rounds} rounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import maybe_attr, maybe_span
+
 from .compressors import ContractiveCompressor
 from .comm_model import CommLedger, CommModel
 from .problems import L1Problem
@@ -166,6 +168,8 @@ def run(
             else transport
         )
         assert len(fleet) == problem.n, (len(fleet), problem.n)
+        if tracker is not None:
+            fleet.attach_tracker(tracker)
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
     step = jax.jit(make_step(problem, comp, stepsize, return_delta=need_delta,
@@ -189,21 +193,36 @@ def run(
             break
         key, sub = jax.random.split(key)
         prev_w = state.w
-        state, m = step(state, sub, force_sync)
-        synced = force_sync
-        force_sync = False
-        if fleet is not None:
-            if synced:  # self-contained re-anchor: the full new shift
-                payload = wire.encode_dense(np.asarray(state.w), mag=wire_mag)
-            else:
-                payload = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
-            oks = fleet.broadcast(payload, sync=synced)
-            fleet.drain()
-            if not all(oks) or fleet.resync_needed:
-                # two-phase commit: some worker is stale — keep the server
-                # shift at w^t and repair next round with a dense re-anchor
-                state = state._replace(w=prev_w)
-                force_sync = True
+        with maybe_span(tracker, "round", round=t, alg="ef21p") as rsp:
+            with maybe_span(tracker, "subgrad", fused="subgrad+stepsize+compress"):
+                state, m = step(state, sub, force_sync)
+                if tracker is not None:
+                    jax.block_until_ready(m["f_x"])
+            synced = force_sync
+            force_sync = False
+            with maybe_span(tracker, "stepsize") as ssp:
+                gamma = float(m["gamma"])
+                maybe_attr(ssp, gamma=gamma)
+            maybe_attr(rsp, full_sync=synced, force_sync=synced, gamma=gamma)
+            if fleet is not None:
+                with maybe_span(tracker, "broadcast", full_sync=synced) as bsp:
+                    with maybe_span(tracker, "encode"):
+                        if synced:  # self-contained re-anchor: the full new shift
+                            payload = wire.encode_dense(
+                                np.asarray(state.w), mag=wire_mag)
+                        else:
+                            payload = wire.encode_sparse(
+                                np.asarray(m["delta"]), mag=wire_mag)
+                    oks = fleet.broadcast(payload, sync=synced)
+                    fleet.drain()
+                    if not all(oks) or fleet.resync_needed:
+                        # two-phase commit: some worker is stale — keep the
+                        # server shift at w^t and repair next round with a
+                        # dense re-anchor
+                        state = state._replace(w=prev_w)
+                        force_sync = True
+                    maybe_attr(bsp, delivered=int(sum(oks)),
+                               resync_next=force_sync)
         if synced:
             ledger.log_s2w_dense()
         else:
@@ -225,7 +244,7 @@ def run(
             hist["t"].append(t)
             hist["f_x"].append(float(m["f_x"]))
             hist["f_w"].append(float(m["f_w"]))
-            hist["gamma"].append(float(m["gamma"]))
+            hist["gamma"].append(gamma)
             hist["s2w_bits"].append(ledger.s2w_bits)
             hist["w2s_bits"].append(ledger.w2s_bits)
             if partial:

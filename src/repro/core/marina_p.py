@@ -25,6 +25,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import maybe_attr, maybe_span
+
 from .compressors import PermK, RandK, UnbiasedCompressor
 from .comm_model import CommLedger, CommModel
 from .problems import L1Problem
@@ -238,6 +240,8 @@ def run(
             else transport
         )
         assert len(fleet) == problem.n, (len(fleet), problem.n)
+        if tracker is not None:
+            fleet.attach_tracker(tracker)  # link/* spans nest under rounds
     cm = CommModel(d=problem.d)
     ledger = CommLedger(model=cm)
     step = jax.jit(make_step(problem, mode, k, p, stepsize, return_q=need_q,
@@ -261,23 +265,48 @@ def run(
             break
         key, sub = jax.random.split(key)
         prev_W = state.W
-        state, m = step(state, sub, force_sync)
-        force_sync = False
-        full_sync = float(m["full_sync"]) > 0
-        if fleet is not None:
-            if full_sync:
-                payload = wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
-                oks = fleet.broadcast(payload, sync=True)
-            else:
-                Q = np.asarray(m["Q"])
-                oks = fleet.send_per_worker(
-                    [wire.encode_sparse(Q[i], mag=wire_mag) for i in range(problem.n)]
-                )
-            if not all(oks):  # undelivered workers keep their stale shifts
-                mask = jnp.asarray(oks)[:, None]
-                state = state._replace(W=jnp.where(mask, state.W, prev_W))
-            fleet.drain()
-            force_sync = fleet.resync_needed or not all(oks)
+        was_forced = force_sync
+        # §10 trace: one "round" span per iteration; the jitted step
+        # (subgrad + stepsize + compress, fused) is charged to "subgrad",
+        # the host read of gamma to "stepsize", and the transport section
+        # to "broadcast" with encode + per-worker link/* children.
+        with maybe_span(tracker, "round", round=t, alg="marina_p") as rsp:
+            with maybe_span(tracker, "subgrad",
+                            fused="subgrad+stepsize+compress"):
+                state, m = step(state, sub, force_sync)
+                if tracker is not None:
+                    jax.block_until_ready(m["f_x"])
+            force_sync = False
+            with maybe_span(tracker, "stepsize") as ssp:
+                gamma = float(m["gamma"])
+                maybe_attr(ssp, gamma=gamma)
+            full_sync = float(m["full_sync"]) > 0
+            maybe_attr(rsp, full_sync=full_sync, force_sync=was_forced,
+                       gamma=gamma)
+            if fleet is not None:
+                with maybe_span(tracker, "broadcast",
+                                full_sync=full_sync) as bsp:
+                    with maybe_span(tracker, "encode"):
+                        if full_sync:
+                            payloads = [wire.encode_dense(
+                                np.asarray(m["x_new"]), mag=wire_mag)]
+                        else:
+                            Q = np.asarray(m["Q"])
+                            payloads = [
+                                wire.encode_sparse(Q[i], mag=wire_mag)
+                                for i in range(problem.n)
+                            ]
+                    if full_sync:
+                        oks = fleet.broadcast(payloads[0], sync=True)
+                    else:
+                        oks = fleet.send_per_worker(payloads)
+                    if not all(oks):  # undelivered workers keep stale shifts
+                        mask = jnp.asarray(oks)[:, None]
+                        state = state._replace(W=jnp.where(mask, state.W, prev_W))
+                    fleet.drain()
+                    force_sync = fleet.resync_needed or not all(oks)
+                    maybe_attr(bsp, delivered=int(sum(oks)),
+                               resync_next=force_sync)
         if full_sync:
             ledger.log_s2w_dense()
         else:
@@ -307,7 +336,7 @@ def run(
             hist["t"].append(t)
             hist["f_x"].append(float(m["f_x"]))
             hist["f_w"].append(float(m["f_w"]))
-            hist["gamma"].append(float(m["gamma"]))
+            hist["gamma"].append(gamma)
             hist["drift"].append(float(m["drift"]))
             hist["s2w_bits"].append(ledger.s2w_bits)
             hist["w2s_bits"].append(ledger.w2s_bits)

@@ -44,6 +44,7 @@ from repro.core.compressors import ContractiveCompressor, TopK
 from repro.core.marina_p import make_broadcast
 from repro.core.problems import paper_sign
 from repro.core.stepsizes import Stepsize
+from repro.obs.trace import maybe_attr, maybe_span
 
 from .population import FleetL1Problem
 from .sampler import CohortSampler
@@ -247,55 +248,72 @@ def fleet_run(
         weights = jnp.asarray(co.weights, jnp.float32)
         key, sub = jax.random.split(key)
 
-        if algorithm == "marina_p":
-            x, W, w_start, m = step(x, W, A, active, weights,
-                                    jnp.asarray(fresh_np), sub, t)
-            coin = float(m["full_sync"]) > 0
-            q_nnz = np.asarray(m["q_nnz"])
-        else:
-            x, w, m = step(x, w, A, active, weights, sub, t)
-            coin = False
-            delta_nnz = float(m["delta_nnz"])
+        with maybe_span(tracker, "round", round=t,
+                        alg=f"fleet/{algorithm}") as rsp:
+            with maybe_span(tracker, "subgrad",
+                            fused="subgrad+stepsize+compress"):
+                if algorithm == "marina_p":
+                    x, W, w_start, m = step(x, W, A, active, weights,
+                                            jnp.asarray(fresh_np), sub, t)
+                    coin = float(m["full_sync"]) > 0
+                    q_nnz = np.asarray(m["q_nnz"])
+                else:
+                    x, w, m = step(x, w, A, active, weights, sub, t)
+                    coin = False
+                    delta_nnz = float(m["delta_nnz"])
+            with maybe_span(tracker, "stepsize") as ssp:
+                gamma = float(m["gamma"])
+                maybe_attr(ssp, gamma=gamma)
+            maybe_attr(rsp, full_sync=coin, gamma=gamma)
 
-        # -- per-slot delivery through the transport failure model ---------
-        n_active = co.n_active
-        delivered = co.active.copy()
-        payloads = [None] * c
-        if measure_wire or spec.fault_rate > 0:
+            # -- per-slot delivery through the transport failure model -----
+            n_active = co.n_active
+            delivered = co.active.copy()
+            payloads = [None] * c
+            with maybe_span(tracker, "broadcast", full_sync=coin) as bsp:
+                if measure_wire or spec.fault_rate > 0:
+                    for i in np.nonzero(co.active)[0]:
+                        cid = int(co.ids[i])
+                        with maybe_span(tracker, f"link/client{cid}",
+                                        fresh=bool(fresh_np[i])) as lsp:
+                            if measure_wire:
+                                with maybe_span(tracker, "encode"):
+                                    if algorithm == "marina_p":
+                                        buf = (wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
+                                               if coin else
+                                               wire.encode_sparse(np.asarray(m["Q"][i]), mag=wire_mag))
+                                    else:
+                                        buf = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+                                    if fresh_np[i]:
+                                        join_payload = wire.encode_dense(
+                                            np.asarray(x if algorithm == "marina_p" else w), mag=wire_mag)
+                                        wire_bits += wire.measured_bits(join_payload)
+                                    wire_bits += wire.measured_bits(buf)
+                                    payloads[i] = buf
+                            if spec.fault_rate > 0:
+                                from repro.transport import FaultInjector
+
+                                fspec = spec.fault_spec_for(cid, round_salt=t)
+                                if fspec.any_faults:
+                                    inj = FaultInjector(fspec)
+                                    buf = payloads[i] if payloads[i] is not None else b"\x00" * 16
+                                    delivered[i] = len(inj.plan(buf)) > 0
+                            maybe_attr(lsp, delivered=bool(delivered[i]))
+                maybe_attr(bsp, delivered=int(delivered.sum()),
+                           fresh=int(fresh_np.sum()),
+                           resync_next=not bool(delivered.all()))
+
+            # slots whose round message was dropped keep their pre-round
+            # state and resync (join dense) at their next attendance
+            if algorithm == "marina_p" and not bool(delivered.all()):
+                W = jnp.where(jnp.asarray(delivered)[:, None], W, w_start)
             for i in np.nonzero(co.active)[0]:
-                if measure_wire:
-                    if algorithm == "marina_p":
-                        buf = (wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
-                               if coin else
-                               wire.encode_sparse(np.asarray(m["Q"][i]), mag=wire_mag))
-                    else:
-                        buf = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
-                    if fresh_np[i]:
-                        join_payload = wire.encode_dense(
-                            np.asarray(x if algorithm == "marina_p" else w), mag=wire_mag)
-                        wire_bits += wire.measured_bits(join_payload)
-                    wire_bits += wire.measured_bits(buf)
-                    payloads[i] = buf
-                if spec.fault_rate > 0:
-                    from repro.transport import FaultInjector
-
-                    fspec = spec.fault_spec_for(int(co.ids[i]), round_salt=t)
-                    if fspec.any_faults:
-                        inj = FaultInjector(fspec)
-                        buf = payloads[i] if payloads[i] is not None else b"\x00" * 16
-                        delivered[i] = len(inj.plan(buf)) > 0
-
-        # slots whose round message was dropped keep their pre-round state
-        # and resync (join dense) at their next attendance
-        if algorithm == "marina_p" and not bool(delivered.all()):
-            W = jnp.where(jnp.asarray(delivered)[:, None], W, w_start)
-        for i in np.nonzero(co.active)[0]:
-            cid = int(co.ids[i])
-            if delivered[i]:
-                dirty.discard(cid)
-            else:
-                dirty.add(cid)
-        prev_ids = np.where(co.active, co.ids, -1)
+                cid = int(co.ids[i])
+                if delivered[i]:
+                    dirty.discard(cid)
+                else:
+                    dirty.add(cid)
+            prev_ids = np.where(co.active, co.ids, -1)
 
         # -- bit accounting (paper 64-bit model) ----------------------------
         n_fresh = int(fresh_np.sum())
@@ -329,7 +347,7 @@ def fleet_run(
             hist["t"].append(t)
             hist["f_x"].append(fx)
             hist["f_w"].append(float(m["f_w"]))
-            hist["gamma"].append(float(m["gamma"]))
+            hist["gamma"].append(gamma)
             hist["participants"].append(n_active)
             hist["fresh"].append(n_fresh)
             hist["delivered"].append(int(delivered.sum()))

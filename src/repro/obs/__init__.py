@@ -7,14 +7,22 @@ Three layers (DESIGN.md §7):
 * :mod:`~repro.obs.bench_json` — the schema-versioned ``BENCH_<suite>.json``
   sink, validator and provenance capture (git rev, jax version, device);
 * :mod:`~repro.obs.loggers` — the shared human logger + process-default
-  structured sink used by the launch CLIs.
+  structured sink used by the launch CLIs;
+* :mod:`~repro.obs.trace` — span-based round tracing (``tracker.span``)
+  over the same event protocol (DESIGN.md §10);
+* :mod:`~repro.obs.analyze` — the post-mortem CLI: span-tree validation,
+  Chrome/Perfetto export, per-round critical-path attribution;
+* :mod:`~repro.obs.hist` — streaming percentile histograms shared by the
+  BENCH sink and the analyzer.
 
 Regression gating against committed baselines lives in
 ``benchmarks/bench_diff.py`` (it consumes the ``gates`` block these
 artifacts carry).
 """
 from .bench_json import SCHEMA_VERSION, BenchJsonSink, environment, load, validate
+from .hist import StreamingHistogram, percentile
 from .loggers import default_tracker, get_logger, reset_default_tracker
+from .trace import SPAN_KIND, Span, maybe_attr, maybe_span, span
 from .tracker import (
     CompositeTracker,
     CsvStdoutTracker,
@@ -29,12 +37,15 @@ from .tracker import (
 
 __all__ = [
     "SCHEMA_VERSION",
+    "SPAN_KIND",
     "BenchJsonSink",
     "CompositeTracker",
     "CsvStdoutTracker",
     "JsonlTracker",
     "MemoryTracker",
     "NullTracker",
+    "Span",
+    "StreamingHistogram",
     "Tracker",
     "default_tracker",
     "environment",
@@ -42,7 +53,11 @@ __all__ = [
     "flatten_metrics",
     "get_logger",
     "load",
+    "maybe_attr",
+    "maybe_span",
+    "percentile",
     "read_jsonl",
     "reset_default_tracker",
+    "span",
     "validate",
 ]

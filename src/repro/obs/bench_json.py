@@ -39,17 +39,14 @@ import subprocess
 import time
 from typing import Any, Dict, List, Mapping, Optional
 
+from .hist import StreamingHistogram, percentile as _percentile
 from .tracker import Tracker
 
 SCHEMA_VERSION = 1
-_RESERVOIR = 4096  # cap per-metric sample retention for percentile estimates
-
-
-def _percentile(sorted_vals: List[float], q: float) -> float:
-    if not sorted_vals:
-        return float("nan")
-    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
-    return sorted_vals[idx]
+# Exact-percentile retention cap per metric; past it the streaming
+# histogram (which has seen every sample, not just the first N) takes
+# over — see hist.StreamingHistogram.
+_RESERVOIR = 4096
 
 
 def environment(seed: Optional[int] = None) -> Dict[str, Any]:
@@ -92,8 +89,8 @@ class BenchJsonSink(Tracker):
         self.seed = seed
         self.gates = list(gates or [])
         self._metrics: Dict[str, Dict[str, Any]] = {}
-        self._samples: Dict[str, List[float]] = {}
-        self._timers: Dict[str, List[float]] = {}
+        self._samples: Dict[str, StreamingHistogram] = {}
+        self._timers: Dict[str, StreamingHistogram] = {}
         self.path = os.path.join(out_dir, f"BENCH_{suite}.json")
 
     # -- event aggregation ---------------------------------------------------
@@ -108,9 +105,14 @@ class BenchJsonSink(Tracker):
             entry["derived"] = str(value)
             return
         entry["value"] = float(value)
-        samples = self._samples.setdefault(name, [])
-        if len(samples) < _RESERVOIR:
-            samples.append(float(value))
+        self._samples.setdefault(
+            name, StreamingHistogram(exact_cap=_RESERVOIR)
+        ).add(float(value))
+
+    def _observe_timer(self, name: str, seconds: float) -> None:
+        self._timers.setdefault(
+            name, StreamingHistogram(exact_cap=_RESERVOIR)
+        ).add(float(seconds))
 
     def emit(self, event: Dict[str, Any]) -> None:
         kind = event.get("kind")
@@ -122,7 +124,12 @@ class BenchJsonSink(Tracker):
             for k, v in event["metrics"].items():
                 self._observe(k, v)
         elif kind == "timer":
-            self._timers.setdefault(event["name"], []).append(float(event["seconds"]))
+            self._observe_timer(event["name"], event["seconds"])
+        elif kind == "span":
+            # span durations aggregate like timers, namespaced so a span
+            # and a timer sharing a name cannot collide
+            self._observe_timer(f"span/{event['name']}",
+                                float(event["t1"]) - float(event["t0"]))
 
     # -- document ------------------------------------------------------------
 
@@ -130,21 +137,14 @@ class BenchJsonSink(Tracker):
         metrics: Dict[str, Any] = {}
         for name, entry in self._metrics.items():
             out = dict(entry)
-            samples = sorted(self._samples.get(name, []))
-            if len(samples) > 1:
-                out["p50"] = _percentile(samples, 0.50)
-                out["p99"] = _percentile(samples, 0.99)
+            hist = self._samples.get(name)
+            if hist is not None and hist.n > 1:
+                out["p50"] = hist.quantile(0.50)
+                out["p99"] = hist.quantile(0.99)
             metrics[name] = out
         timers: Dict[str, Any] = {}
-        for name, vals in self._timers.items():
-            s = sorted(vals)
-            timers[name] = {
-                "n": len(s),
-                "total_s": sum(s),
-                "mean_s": sum(s) / len(s),
-                "p50_s": _percentile(s, 0.50),
-                "p99_s": _percentile(s, 0.99),
-            }
+        for name, hist in self._timers.items():
+            timers[name] = hist.summary("_s")
         return {
             "schema_version": SCHEMA_VERSION,
             "suite": self.suite,

@@ -8,6 +8,10 @@ A tracker receives *events* — normalized dicts with a ``kind``:
               "derived": scalar|str, "wall_time": float}
     timer    {"kind": "timer", "name": str, "seconds": float,
               "step": int|None, "wall_time": float}
+    span     {"kind": "span", "name": str, "span_id": int, "parent": int|None,
+              "t0": float, "t1": float, "attrs": {...}}      (trace.py, §10)
+    profile  {"kind": "profile", "name": str, "trace_dir": str,
+              "wall_time": float}                (jax.profiler provenance)
 
 ``log`` flattens nested dicts with "/" and coerces jax/numpy scalars to
 python floats, so every backend sees the same flat schema. ``row`` is the
@@ -122,18 +126,38 @@ class Tracker:
                 }
             )
 
+    def span(self, name: str, **attrs):
+        """Open a trace span (DESIGN.md §10) — ``with tracker.span("round",
+        round=t) as sp:``. Nested spans parent automatically; the span
+        event is emitted through :meth:`emit` at exit."""
+        from .trace import span as _span
+
+        return _span(self, name, **attrs)
+
     @contextlib.contextmanager
     def profile(self, name: str, trace_dir: Optional[str] = None):
         """jax.profiler trace around a block; no-op unless a trace dir is
-        given (or REPRO_OBS_TRACE_DIR is set)."""
+        given (or REPRO_OBS_TRACE_DIR is set). When a trace is written, a
+        ``{"kind": "profile", "name", "trace_dir"}`` event records its
+        location, so profiler artifacts are discoverable from the event
+        log instead of silently landing on disk."""
         trace_dir = trace_dir or os.environ.get("REPRO_OBS_TRACE_DIR")
         if not trace_dir:
             yield
             return
         import jax
 
-        with jax.profiler.trace(os.path.join(trace_dir, name)):
+        path = os.path.join(trace_dir, name)
+        with jax.profiler.trace(path):
             yield
+        self.emit(
+            {
+                "kind": "profile",
+                "name": str(name),
+                "trace_dir": path,
+                "wall_time": time.time(),
+            }
+        )
 
 
 class NullTracker(Tracker):
@@ -214,12 +238,13 @@ class CompositeTracker(Tracker):
 
 
 def events_equal(a: Iterable[Mapping[str, Any]], b: Iterable[Mapping[str, Any]]) -> bool:
-    """Compare event streams ignoring wall-clock and timer jitter."""
+    """Compare event streams ignoring wall-clock and timer/span jitter."""
 
     def norm(events):
         out = []
         for e in events:
-            e = {k: v for k, v in e.items() if k not in ("wall_time", "seconds")}
+            e = {k: v for k, v in e.items()
+                 if k not in ("wall_time", "seconds", "t0", "t1")}
             out.append(json.loads(json.dumps(e, default=str)))
         return out
 

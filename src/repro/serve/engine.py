@@ -162,7 +162,13 @@ class DecodeEngine:
         sequence, and reset the gate. The params are only mutated after
         the payload fully validates (decode-to-scratch first)."""
         from repro import transport
+        from repro.obs.trace import maybe_attr, maybe_span
 
+        with maybe_span(self.tracker, "serve/delta_sync",
+                        bytes=len(buf)) as sp:
+            self._delta_sync(bytes(buf), transport, sp, maybe_attr)
+
+    def _delta_sync(self, buf: bytes, transport, sp, maybe_attr) -> None:
         if transport.is_frame(bytes(buf)):
             frame, _ = transport.decode_frame(bytes(buf))
             if frame.ftype == transport.FrameType.SYNC:
@@ -172,6 +178,7 @@ class DecodeEngine:
                     )
                 self.params = apply_wire_sync(self.params, frame.payload)
                 self._delta_seq = frame.seq
+                maybe_attr(sp, ftype="SYNC", seq=frame.seq)
                 return
             if frame.ftype == transport.FrameType.DATA:
                 if self._delta_seq is not None:
@@ -188,38 +195,53 @@ class DecodeEngine:
                 raise ValueError(f"frame type {frame.ftype!r} carries no delta")
             self.params = apply_wire_delta(self.params, frame.payload)
             self._delta_seq = frame.seq
+            maybe_attr(sp, ftype="DATA", seq=frame.seq)
         else:
             self.params = apply_wire_delta(self.params, buf)
+            maybe_attr(sp, ftype="bare")
 
     def run(self, prompts: jax.Array, n_new_tokens: int, seed: int = 0):
         """prompts: [B, S] (or [B, K, S]). Returns generated tokens [B, n].
 
         With a ``tracker`` attached, each request logs prefill/decode
         latency ("serve/prefill", "serve/decode" timer events — BENCH
-        aggregation turns repeats into p50/p99) plus a tokens/s metric.
+        aggregation turns repeats into p50/p99) plus a tokens/s metric,
+        and emits a "serve/request" span with "prefill"/"decode" children
+        (DESIGN.md §10 — the span names are distinct from the timer names
+        so the two event streams cannot collide in aggregation).
         """
         from repro import obs
+        from repro.obs.trace import maybe_attr, span
 
         tracker = self.tracker or obs.NullTracker()
         caches = self.fresh_caches()
-        with tracker.time_block("serve/prefill") as tb:
-            caches, last_logits = self._prefill(self.params, caches, prompts)
-            tb.block(last_logits)
-        prefill_s = tb.seconds
-        start = prompts.shape[-1]
-        with tracker.time_block("serve/decode") as tb:
-            _, _, toks = self._generate(
-                self.params, caches, last_logits, start, jax.random.PRNGKey(seed), n_new_tokens
+        with span(tracker, "serve/request", batch=prompts.shape[0],
+                  prompt_len=prompts.shape[-1],
+                  new_tokens=n_new_tokens) as rsp:
+            with span(tracker, "prefill"):
+                with tracker.time_block("serve/prefill") as tb:
+                    caches, last_logits = self._prefill(
+                        self.params, caches, prompts)
+                    tb.block(last_logits)
+                prefill_s = tb.seconds
+            start = prompts.shape[-1]
+            with span(tracker, "decode"):
+                with tracker.time_block("serve/decode") as tb:
+                    _, _, toks = self._generate(
+                        self.params, caches, last_logits, start,
+                        jax.random.PRNGKey(seed), n_new_tokens
+                    )
+                    tb.block(toks)
+                decode_s = tb.seconds
+            total = prefill_s + decode_s
+            tokens_per_s = (
+                prompts.shape[0] * n_new_tokens / decode_s if decode_s > 0 else 0.0
             )
-            tb.block(toks)
-        decode_s = tb.seconds
-        total = prefill_s + decode_s
+            maybe_attr(rsp, tokens_per_s=tokens_per_s)
         tracker.log(
             {
                 "serve/request_s": total,
-                "serve/tokens_per_s": (
-                    prompts.shape[0] * n_new_tokens / decode_s if decode_s > 0 else 0.0
-                ),
+                "serve/tokens_per_s": tokens_per_s,
                 "serve/batch": prompts.shape[0],
                 "serve/prompt_len": prompts.shape[-1],
                 "serve/new_tokens": n_new_tokens,

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.comm_model import CommModel
 from repro.core.compressors import BlockTopK
+from repro.obs.trace import maybe_attr, maybe_span
 
 Array = jax.Array
 
@@ -271,19 +272,28 @@ class MarinaPDownlink:
         """
         k_bern, k_comp = jax.random.split(key)
         c = bool(jax.random.bernoulli(k_bern, self.sync_p)) or bool(force_sync)
-        if c:
-            oks = fleet.broadcast(self._dense_buf(server_new, mag), sync=True)
-        else:
-            oks = fleet.send_per_worker(
-                self._sparse_bufs(k_comp, server_new, server_old, mag)
-            )
-        fleet.drain()
-        res = {
-            "full_sync": c,
-            "oks": oks,
-            "delivered_frac": sum(oks) / len(oks),
-            "resync_needed": fleet.resync_needed or not all(oks),
-        }
+        if tracker is not None:
+            fleet.attach_tracker(tracker)
+        with maybe_span(tracker, "broadcast", full_sync=c) as bsp:
+            with maybe_span(tracker, "encode"):
+                if c:
+                    payloads = [self._dense_buf(server_new, mag)]
+                else:
+                    payloads = self._sparse_bufs(
+                        k_comp, server_new, server_old, mag)
+            if c:
+                oks = fleet.broadcast(payloads[0], sync=True)
+            else:
+                oks = fleet.send_per_worker(payloads)
+            fleet.drain()
+            res = {
+                "full_sync": c,
+                "oks": oks,
+                "delivered_frac": sum(oks) / len(oks),
+                "resync_needed": fleet.resync_needed or not all(oks),
+            }
+            maybe_attr(bsp, delivered=int(sum(oks)),
+                       resync_next=res["resync_needed"])
         if tracker is not None:
             tracker.log(
                 {
@@ -375,30 +385,38 @@ class EF21PDownlink:
 
         from repro import wire
 
-        if force_sync:
-            flat = np.asarray(
-                jax.flatten_util.ravel_pytree(
-                    jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
-                )[0]
-            )
-            buf = wire.encode_dense(flat, mag=mag)
-        else:
-            comp = self.comp
-            parts = [
-                np.asarray(
-                    comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
-                )
-                for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
-            ]
-            buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
-        oks = fleet.broadcast(buf, sync=bool(force_sync))
-        fleet.drain()
-        res = {
-            "full_sync": bool(force_sync),
-            "oks": oks,
-            "delivered_frac": sum(oks) / len(oks),
-            "resync_needed": fleet.resync_needed or not all(oks),
-        }
+        if tracker is not None:
+            fleet.attach_tracker(tracker)
+        with maybe_span(tracker, "broadcast",
+                        full_sync=bool(force_sync)) as bsp:
+            with maybe_span(tracker, "encode"):
+                if force_sync:
+                    flat = np.asarray(
+                        jax.flatten_util.ravel_pytree(
+                            jax.tree.map(
+                                lambda t: t.astype(jnp.float32), server_new)
+                        )[0]
+                    )
+                    buf = wire.encode_dense(flat, mag=mag)
+                else:
+                    comp = self.comp
+                    parts = [
+                        np.asarray(
+                            comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
+                        )
+                        for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
+                    ]
+                    buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+            oks = fleet.broadcast(buf, sync=bool(force_sync))
+            fleet.drain()
+            res = {
+                "full_sync": bool(force_sync),
+                "oks": oks,
+                "delivered_frac": sum(oks) / len(oks),
+                "resync_needed": fleet.resync_needed or not all(oks),
+            }
+            maybe_attr(bsp, delivered=int(sum(oks)),
+                       resync_next=res["resync_needed"])
         if tracker is not None:
             tracker.log(
                 {

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core.comm_model import CommModel
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs.trace import maybe_attr, span
 from repro.optim import Optimizer
 from .downlink import EF21PDownlink, MarinaPDownlink, tree_size
 
@@ -229,21 +230,28 @@ def train_loop(
         k_step = jax.random.fold_in(k_steps, i)
         prev_server = state["server"]
         prev_workers = state.get("workers")
-        with tracker.time_block("train/step", step=i) as tb:
-            state, m = step(state, batch, k_step, force_sync)
-            tb.block(m)
-        if fleet is not None:
-            if isinstance(downlink, EF21PDownlink):
-                res = downlink.broadcast_via(
-                    fleet, k_step, state["server"], prev_workers,
-                    mag=wire_mag, force_sync=force_sync, tracker=tracker, step=i,
-                )
-            else:
-                res = downlink.broadcast_via(
-                    fleet, k_step, state["server"], prev_server,
-                    mag=wire_mag, force_sync=force_sync, tracker=tracker, step=i,
-                )
-            force_sync = res["resync_needed"]
+        was_forced = force_sync
+        with span(tracker, "round", round=i, alg="train") as rsp:
+            with tracker.time_block("train/step", step=i) as tb:
+                state, m = step(state, batch, k_step, force_sync)
+                tb.block(m)
+            if fleet is not None:
+                if isinstance(downlink, EF21PDownlink):
+                    res = downlink.broadcast_via(
+                        fleet, k_step, state["server"], prev_workers,
+                        mag=wire_mag, force_sync=force_sync, tracker=tracker,
+                        step=i,
+                    )
+                else:
+                    res = downlink.broadcast_via(
+                        fleet, k_step, state["server"], prev_server,
+                        mag=wire_mag, force_sync=force_sync, tracker=tracker,
+                        step=i,
+                    )
+                force_sync = res["resync_needed"]
+                maybe_attr(rsp, full_sync=res["full_sync"],
+                           resync_next=force_sync)
+            maybe_attr(rsp, force_sync=was_forced, loss=float(m["loss"]))
         if i % log_every == 0:
             tracker.log({"train": m}, step=i)
     if fleet is not None:

@@ -258,6 +258,7 @@ class Link:
     ) -> None:
         self.name = name
         self.stats = LinkStats()
+        self.tracker = None  # repro.obs Tracker: per-send link/* spans (§10)
         data: Channel = LoopbackChannel()
         if fault_spec is not None and fault_spec.any_faults:
             data = FaultyChannel(data, fault_spec)
@@ -281,7 +282,34 @@ class Link:
 
         ``sync=True`` sends a self-contained SYNC frame, which repairs any
         receiver-side gap and clears the link's resync flag on delivery.
+
+        With a ``tracker`` attached, the whole send -> ack cycle is traced
+        as a ``link/<name>`` span (retry/resync deltas and the carried
+        LinkStats counters as attrs, DESIGN.md §10.2), with a zero-width
+        ``link/<name>/retry`` marker span per retransmission attempt.
         """
+        from repro.obs.trace import maybe_attr, maybe_span
+
+        was_resync = self.sender.resync_needed
+        r0, rs0, tick0 = self.stats.retries, self.stats.resyncs, self.data.now
+        with maybe_span(
+            self.tracker, f"link/{self.name}",
+            ftype="SYNC" if sync else "DATA", bytes=len(payload),
+        ) as sp:
+            ok = self._send(payload, sync=sync)
+            maybe_attr(
+                sp,
+                delivered=ok,
+                seq=self.sender.next_seq - 1,
+                retries=self.stats.retries - r0,
+                resyncs=self.stats.resyncs - rs0,
+                resync_needed=self.sender.resync_needed,
+                repaired_resync=bool(sync and was_resync and ok),
+                ticks=self.data.now - tick0,
+            )
+        return ok
+
+    def _send(self, payload: bytes, *, sync: bool = False) -> bool:
         ftype = FrameType.SYNC if sync else FrameType.DATA
         if sync and self.sender.resync_needed:
             self.stats.forced_syncs += 1  # a repair, not an organic sync round
@@ -301,6 +329,11 @@ class Link:
             if attempt < self.max_retries:
                 if self.sender.retransmit(seq):
                     retransmits += 1
+                    if self.tracker is not None:
+                        with self.tracker.span(
+                            f"link/{self.name}/retry", seq=seq, attempt=attempt + 1
+                        ):
+                            pass
                 timeout = max(1, math.ceil(timeout * self.backoff))
         self.stats.delivery_failures += 1
         self.sender._flag_resync()
@@ -321,7 +354,19 @@ class Link:
     def flush(self) -> bool:
         """Pump until every in-flight frame is acked (go-back-N timeouts:
         after ``timeout`` quiet ticks, retransmit all unacked frames, with
-        exponential backoff). Returns False if the retry budget ran out."""
+        exponential backoff). Returns False if the retry budget ran out.
+        Traced as a ``link/<name>/flush`` span when a tracker is attached."""
+        from repro.obs.trace import maybe_attr, maybe_span
+
+        r0, rs0 = self.stats.retries, self.stats.resyncs
+        with maybe_span(self.tracker, f"link/{self.name}/flush",
+                        inflight=self.inflight) as sp:
+            ok = self._flush()
+            maybe_attr(sp, delivered=ok, retries=self.stats.retries - r0,
+                       resyncs=self.stats.resyncs - rs0)
+        return ok
+
+    def _flush(self) -> bool:
         target = self.sender.next_seq
         timeout = self.timeout
         start = self.data.now
@@ -403,6 +448,12 @@ class Fleet:
     @property
     def resync_needed(self) -> bool:
         return any(l.resync_needed for l in self.links)
+
+    def attach_tracker(self, tracker) -> None:
+        """Point every link's span instrumentation at ``tracker`` (§10).
+        Link sends running inside an open round span parent under it."""
+        for l in self.links:
+            l.tracker = tracker
 
     def send_per_worker(self, payloads: List[bytes], *, sync: bool = False) -> List[bool]:
         assert len(payloads) == len(self.links)
