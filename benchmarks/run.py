@@ -12,7 +12,10 @@ and regression gates for ``benchmarks/bench_diff.py``. Modules:
   comm_complexity    Cor. 1/2   rounds-to-eps vs closed-form complexity
   kernel_bench       —          Pallas kernel (interpret) microbenchmarks
   wire_bench         DESIGN §3  wire codec throughput (also a standalone CLI
-                                with measured-vs-analytic parity checks)
+                                with measured-vs-analytic parity checks);
+                                also provides the ``encode`` suite — fused
+                                on-device encode roofline + byte-identity
+                                gate (DESIGN §11)
   transport_bench    DESIGN §8  frame/CRC throughput + clean-vs-degraded
                                 MARINA-P chaos run (goodput, rounds_ratio)
   serve_bench        DESIGN §10 DecodeEngine prefill/decode span p50/p99
@@ -44,6 +47,16 @@ GATES = {
         _TIME,
         # derived value = codec throughput in GB/s (higher is better)
         {"pattern": "wire/*", "field": "value", "direction": "higher", "rtol": 0.9},
+    ],
+    "encode": [
+        _TIME,
+        # host-codec GB/s floor (device interpret rows are covered by _TIME;
+        # their wall-clock varies too much across CI machines for a
+        # throughput gate)
+        {"pattern": "encode/host_*", "field": "value", "direction": "higher", "rtol": 0.9},
+        # fused streams must equal the host codec's bytes — a correctness
+        # gate riding the perf artifact (1.0 = identical, exact match)
+        {"pattern": "encode/byte_identical", "field": "value", "direction": "eq", "rtol": 0.0},
     ],
     "table2": [
         # sigma_A is deterministic for a fixed seed/platform
@@ -103,6 +116,7 @@ def main(argv=None) -> int:
         "comm_complexity": comm_complexity.bench,
         "kernels": kernel_bench.bench,
         "wire": wire_bench.bench,
+        "encode": wire_bench.bench_encode,
         "roofline": roofline_report.bench,
         "transport": transport_bench.bench,
         "serve": serve_bench.bench,
@@ -128,7 +142,7 @@ def main(argv=None) -> int:
     selected = list(args.suites)
     if not selected:
         selected = ["fig1", "table2", "stepsize_grid", "comm_complexity", "kernels",
-                    "wire", "transport", "serve", "scenario"]
+                    "wire", "encode", "transport", "serve", "scenario"]
         if os.path.isdir(roofline_report.DEFAULT_DIR) and os.listdir(roofline_report.DEFAULT_DIR):
             selected.append("roofline")
 

@@ -1,10 +1,15 @@
 """Wire codec benchmark: throughput + measured-vs-analytic parity.
 
-Two sections:
+Three sections:
 
 * **throughput** — encode/decode GB/s of the host codecs (sparse, natural,
   dense) and the on-device pack/unpack kernels (interpret mode on CPU);
   rates are measured against the *dense fp32 payload* the codec represents.
+* **encode roofline** — GB/s of the fused compressor→bitstream encode
+  kernels (kernels/encode.py) per execution mode: the host numpy codec,
+  the Pallas kernels in interpret mode, and (on a real TPU backend only)
+  compiled. Gated in bench-smoke via BENCH_encode.json, including a
+  byte-identity row (fused buffers must equal the host codec's bytes).
 * **parity** — runs MARINA-P (same / ind / perm) and EF21-P on the paper's
   L1 workload with ``measure_wire=True`` and reports measured wire
   bits/round next to the analytic CommLedger (value_bits matched to fp32).
@@ -73,6 +78,95 @@ def throughput_rows(smoke: bool):
     return rows
 
 
+def _encode_inputs(d: int):
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal(d).astype(np.float32)
+    sparse_vec = np.where(rng.random(d) < 1 / 16, dense, 0.0).astype(np.float32)
+    return dense, sparse_vec, jnp.asarray(dense), jnp.asarray(sparse_vec)
+
+
+def _encode_cases(kenc, dj, sj, interpret):
+    return (
+        ("sparse", lambda: kenc.sparse_encode(sj, interpret=interpret)),
+        ("topk", lambda: kenc.topk_encode(dj, k_per_block=64, block=1024,
+                                          interpret=interpret)),
+        ("mask", lambda: kenc.mask_encode(dj, keep_prob=1 / 16, seed=7,
+                                          interpret=interpret)),
+        ("dense", lambda: kenc.dense_encode(dj, interpret=interpret)),
+    )
+
+
+def encode_roofline_rows(smoke: bool):
+    """GB/s roofline of the fused encode paths (kernels/encode.py).
+
+    One row per (mode, path): ``host`` is the numpy codec, ``interpret``
+    runs the Pallas bodies as traced Python (the CPU-container floor), and
+    ``compiled`` appears only on a real TPU backend — Pallas compilation
+    is unavailable off-TPU, so its absence on CPU is the roofline's
+    honest gap, not a silent fallback. Rates are against the dense fp32
+    payload the message represents.
+    """
+    from repro.kernels import encode as kenc
+
+    d = 1 << 14 if smoke else 1 << 16
+    dense, sparse_vec, dj, sj = _encode_inputs(d)
+    payload_gb = dense.nbytes / 1e9
+    rows = []
+    for name, fn in (
+        ("sparse", lambda: wire.encode_sparse(sparse_vec)),
+        ("dense", lambda: wire.encode_dense(dense)),
+    ):
+        dt = _time(fn, iters=3)
+        rows.append((f"encode/host/{name}", payload_gb / dt, len(fn())))
+    modes = [("interpret", True)]
+    if jax.default_backend() == "tpu":
+        modes.append(("compiled", False))
+    for label, interp in modes:
+        for name, fn in _encode_cases(kenc, dj, sj, interp):
+            dt = _time(fn, iters=3)
+            rows.append((f"encode/{label}/{name}", payload_gb / dt, len(fn())))
+    return rows
+
+
+def bench_encode(tracker=None):
+    """benchmarks.run adapter for the fused-encode suite (BENCH_encode.json).
+
+    Rows are (name, us_per_call, derived GB/s) for the host codec and each
+    fused device path at the bench-smoke size, plus ``encode/byte_identical``
+    whose derived value is 1.0 iff every fused buffer equals the host
+    codec's bytes on this run — gated ``eq`` so bench-smoke fails on any
+    stream divergence, not just a perf regression.
+    """
+    from repro.kernels import encode as kenc
+    from repro.kernels import ops
+
+    d = 1 << 14
+    dense, sparse_vec, dj, sj = _encode_inputs(d)
+    payload_gb = dense.nbytes / 1e9
+    rows = []
+    cases = [("encode/host_sparse", lambda: wire.encode_sparse(sparse_vec)),
+             ("encode/host_dense", lambda: wire.encode_dense(dense))]
+    cases += [(f"encode/device_{name}", fn)
+              for name, fn in _encode_cases(kenc, dj, sj, None)]
+    for name, fn in cases:
+        dt = _time(fn, iters=3)
+        rows.append((name, dt * 1e6, round(payload_gb / dt, 4)))
+    t0 = time.perf_counter()
+    same = (
+        kenc.sparse_encode(sj) == wire.encode_sparse(sparse_vec)
+        and kenc.dense_encode(dj) == wire.encode_dense(dense)
+        and kenc.topk_encode(dj, k_per_block=64, block=1024)
+        == wire.encode_sparse(
+            np.asarray(ops.block_topk(dj, k_per_block=64, block=1024)))
+        and kenc.mask_encode(dj, keep_prob=1 / 16, seed=7)
+        == wire.encode_sparse(
+            np.asarray(ops.bernk(dj, keep_prob=1 / 16, seed=7)))
+    )
+    rows.append(("encode/byte_identical", (time.perf_counter() - t0) * 1e6,
+                 1.0 if same else 0.0))
+    return rows
+
+
 def parity_rows(smoke: bool):
     d, n = (256, 4) if smoke else (1024, 4)
     T = 30 if smoke else 200
@@ -128,6 +222,10 @@ def main(argv=None):
 
     print("== codec throughput (dense-payload GB/s) ==")
     for name, gbs, nbytes in throughput_rows(args.smoke):
+        print(f"{name:32s} {gbs:8.3f} GB/s   ({nbytes} wire bytes)")
+
+    print("\n== fused encode roofline (dense-payload GB/s) ==")
+    for name, gbs, nbytes in encode_roofline_rows(args.smoke):
         print(f"{name:32s} {gbs:8.3f} GB/s   ({nbytes} wire bytes)")
 
     print("\n== measured vs analytic bits/round ==")

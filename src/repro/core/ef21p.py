@@ -114,6 +114,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    device_encode: Optional[bool] = None,
     transport=None,
     tracker=None,
     participation=None,
@@ -131,6 +132,11 @@ def run(
     matched to the wire magnitude dtype (hist["wire_model_ledger"] —
     DESIGN.md §3.5); the primary ledger keeps the paper's 64-bit model so
     ``bit_budget`` semantics do not change under measurement.
+
+    ``device_encode`` routes serialization through the fused Pallas encode
+    kernels (kernels/encode.py): True forces on, False forces off, None
+    defers to ``REPRO_DEVICE_ENCODE`` / backend auto-detect (on for TPU).
+    Buffers are byte-identical either way (DESIGN.md §11).
 
     ``transport`` (a :class:`repro.transport.Fleet`, or a
     :class:`repro.transport.FaultSpec` to build one) pushes each round's
@@ -151,10 +157,27 @@ def run(
     need_delta = measure_wire or transport is not None
     wire_model_ledger = None
     fleet = None
+    use_dev = False
     if need_delta:
         import numpy as np
 
         from repro import wire
+        from repro.kernels import encode as kenc
+
+        # Fused on-device encode (kernels/encode.py, DESIGN.md §11):
+        # delta / w are jax arrays here, so the packed buffer comes straight
+        # off the device — byte-identical to the host codec either way.
+        use_dev = kenc.device_encode_enabled(device_encode)
+
+        def enc_dense(v):
+            if use_dev:
+                return kenc.dense_encode(v, mag=wire_mag)
+            return wire.encode_dense(np.asarray(v), mag=wire_mag)
+
+        def enc_sparse(v):
+            if use_dev:
+                return kenc.sparse_encode(v, mag=wire_mag)
+            return wire.encode_sparse(np.asarray(v), mag=wire_mag)
     if measure_wire:
         wire_model_ledger = CommLedger(
             model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
@@ -206,13 +229,11 @@ def run(
             maybe_attr(rsp, full_sync=synced, force_sync=synced, gamma=gamma)
             if fleet is not None:
                 with maybe_span(tracker, "broadcast", full_sync=synced) as bsp:
-                    with maybe_span(tracker, "encode"):
+                    with maybe_span(tracker, "encode", device=use_dev):
                         if synced:  # self-contained re-anchor: the full new shift
-                            payload = wire.encode_dense(
-                                np.asarray(state.w), mag=wire_mag)
+                            payload = enc_dense(state.w)
                         else:
-                            payload = wire.encode_sparse(
-                                np.asarray(m["delta"]), mag=wire_mag)
+                            payload = enc_sparse(m["delta"])
                     oks = fleet.broadcast(payload, sync=synced)
                     fleet.drain()
                     if not all(oks) or fleet.resync_needed:
@@ -236,9 +257,7 @@ def run(
                 wire_model_ledger.log_s2w_sparse(float(m["delta_nnz"]))
             wire_model_ledger.tick()
             wire_total += wire.measured_bits(
-                wire.encode_dense(np.asarray(m["delta"]), mag=wire_mag)
-                if synced
-                else wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
+                enc_dense(m["delta"]) if synced else enc_sparse(m["delta"])
             )
         if t % record_every == 0:
             hist["t"].append(t)

@@ -186,6 +186,7 @@ def run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    device_encode: Optional[bool] = None,
     transport=None,
     tracker=None,
     participation=None,
@@ -202,6 +203,12 @@ def run(
     magnitude dtype (hist["wire_model_ledger"] — DESIGN.md §3.5). The
     primary ledger keeps the paper's 64-bit model, so ``bit_budget``
     semantics are identical with and without measurement.
+
+    ``device_encode`` routes serialization through the fused Pallas encode
+    kernels (kernels/encode.py) instead of the host numpy codec: True
+    forces on, False forces off, None defers to ``REPRO_DEVICE_ENCODE`` /
+    backend auto-detect (on for TPU). Buffers are byte-identical either
+    way (DESIGN.md §11).
 
     ``transport`` (a :class:`repro.transport.Fleet` of per-worker links,
     or a :class:`repro.transport.FaultSpec` to build one) pushes every
@@ -223,10 +230,29 @@ def run(
     need_q = measure_wire or transport is not None
     wire_model_ledger = None
     fleet = None
+    use_dev = False
     if need_q:
         import numpy as np
 
         from repro import wire
+        from repro.kernels import encode as kenc
+
+        # Fused on-device encode (kernels/encode.py): the Q rows / x_new are
+        # already jax arrays here, so when enabled the packed buffers come
+        # straight off the device — byte-identical to the host codec.
+        use_dev = kenc.device_encode_enabled(device_encode)
+
+        def enc_dense(v):
+            if use_dev:
+                return kenc.dense_encode(v, mag=wire_mag)
+            return wire.encode_dense(np.asarray(v), mag=wire_mag)
+
+        def enc_q_rows(Q):
+            if use_dev:
+                return kenc.encode_rows(Q, mag=wire_mag)
+            Qh = np.asarray(Q)
+            return [wire.encode_sparse(Qh[i], mag=wire_mag)
+                    for i in range(Qh.shape[0])]
     if measure_wire:
         wire_model_ledger = CommLedger(
             model=CommModel(d=problem.d, value_bits=wire.MAG_BITS[wire.mag_dtype(wire_mag)])
@@ -286,16 +312,11 @@ def run(
             if fleet is not None:
                 with maybe_span(tracker, "broadcast",
                                 full_sync=full_sync) as bsp:
-                    with maybe_span(tracker, "encode"):
+                    with maybe_span(tracker, "encode", device=use_dev):
                         if full_sync:
-                            payloads = [wire.encode_dense(
-                                np.asarray(m["x_new"]), mag=wire_mag)]
+                            payloads = [enc_dense(m["x_new"])]
                         else:
-                            Q = np.asarray(m["Q"])
-                            payloads = [
-                                wire.encode_sparse(Q[i], mag=wire_mag)
-                                for i in range(problem.n)
-                            ]
+                            payloads = enc_q_rows(m["Q"])
                     if full_sync:
                         oks = fleet.broadcast(payloads[0], sync=True)
                     else:
@@ -316,21 +337,21 @@ def run(
         if measure_wire:
             if full_sync:
                 wire_model_ledger.log_s2w_dense()
-                wire_total += wire.measured_bits(
-                    wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
-                )
+                wire_total += wire.measured_bits(enc_dense(m["x_new"]))
             else:
                 wire_model_ledger.log_s2w_sparse(float(m["q_nnz_mean"]))
-                Q = np.asarray(m["Q"])
                 if mode == "same":  # all rows identical: one encode suffices
-                    wire_total += wire.measured_bits(
-                        wire.encode_sparse(Q[0], mag=wire_mag)
-                    )
+                    if use_dev:
+                        buf = kenc.sparse_encode(m["Q"][0], mag=wire_mag)
+                    else:
+                        buf = wire.encode_sparse(
+                            np.asarray(m["Q"][0]), mag=wire_mag)
+                    wire_total += wire.measured_bits(buf)
                 else:
+                    bufs = enc_q_rows(m["Q"])
                     wire_total += sum(
-                        wire.measured_bits(wire.encode_sparse(Q[i], mag=wire_mag))
-                        for i in range(Q.shape[0])
-                    ) / Q.shape[0]
+                        wire.measured_bits(b) for b in bufs
+                    ) / len(bufs)
             wire_model_ledger.tick()
         if t % record_every == 0:
             hist["t"].append(t)

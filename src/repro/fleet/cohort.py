@@ -178,6 +178,7 @@ def fleet_run(
     record_every: int = 1,
     measure_wire: bool = False,
     wire_mag: str = "fp32",
+    device_encode: Optional[bool] = None,
     eval_clients: int = 64,
     tracker=None,
 ):
@@ -189,7 +190,11 @@ def fleet_run(
     charges the delta nnz per persistent slot. Uplink stays one exact
     dense message per participant per round. ``measure_wire=True``
     additionally serializes every per-slot message with the repro.wire
-    codecs (``hist["wire_bits"]``, DESIGN.md §3.5).
+    codecs (``hist["wire_bits"]``, DESIGN.md §3.5); the round's cohort
+    encodes are batched before the per-slot delivery loop — one vmapped
+    device pass over the active Q rows when ``device_encode`` selects the
+    fused kernels (kernels/encode.py; None defers to
+    ``REPRO_DEVICE_ENCODE``/backend auto-detect), one host pass otherwise.
 
     ``target`` (an f-value on the evaluation cohort) sets
     ``hist["rounds_to_target"]`` — the first recorded round at or below
@@ -203,8 +208,29 @@ def fleet_run(
     if comp is None:
         comp = TopK(k=k)
     cm = CommModel(d=d)
+    use_dev = False
     if measure_wire:
         from repro import wire
+        from repro.kernels import encode as kenc
+
+        use_dev = kenc.device_encode_enabled(device_encode)
+
+        def enc_dense(v):
+            if use_dev:
+                return kenc.dense_encode(v, mag=wire_mag)
+            return wire.encode_dense(np.asarray(v), mag=wire_mag)
+
+        def enc_sparse(v):
+            if use_dev:
+                return kenc.sparse_encode(v, mag=wire_mag)
+            return wire.encode_sparse(np.asarray(v), mag=wire_mag)
+
+        def enc_rows(Q):
+            if use_dev:
+                return kenc.encode_rows(Q, mag=wire_mag)
+            Qh = np.asarray(Q)
+            return [wire.encode_sparse(Qh[i], mag=wire_mag)
+                    for i in range(Qh.shape[0])]
 
     # -- evaluation cohort (fixed, hashed) --------------------------------
     eval_ids = problem.eval_cohort(eval_clients)
@@ -272,24 +298,38 @@ def fleet_run(
             payloads = [None] * c
             with maybe_span(tracker, "broadcast", full_sync=coin) as bsp:
                 if measure_wire or spec.fault_rate > 0:
-                    for i in np.nonzero(co.active)[0]:
+                    active_idx = np.nonzero(co.active)[0]
+                    if measure_wire and active_idx.size:
+                        # batch the round's cohort encodes before the
+                        # delivery loop: the per-slot Q rows go through one
+                        # vmapped device pass (or one host sweep), the
+                        # shared sync / join payloads encode exactly once
+                        with maybe_span(tracker, "encode", device=use_dev):
+                            if algorithm == "marina_p":
+                                if coin:
+                                    shared = enc_dense(m["x_new"])
+                                    for i in active_idx:
+                                        payloads[i] = shared
+                                else:
+                                    rows = enc_rows(m["Q"][active_idx])
+                                    for i, buf in zip(active_idx, rows):
+                                        payloads[i] = buf
+                            else:
+                                shared = enc_sparse(m["delta"])
+                                for i in active_idx:
+                                    payloads[i] = shared
+                            join_payload = (
+                                enc_dense(x if algorithm == "marina_p" else w)
+                                if fresh_np.any() else None
+                            )
+                    for i in active_idx:
                         cid = int(co.ids[i])
                         with maybe_span(tracker, f"link/client{cid}",
                                         fresh=bool(fresh_np[i])) as lsp:
                             if measure_wire:
-                                with maybe_span(tracker, "encode"):
-                                    if algorithm == "marina_p":
-                                        buf = (wire.encode_dense(np.asarray(m["x_new"]), mag=wire_mag)
-                                               if coin else
-                                               wire.encode_sparse(np.asarray(m["Q"][i]), mag=wire_mag))
-                                    else:
-                                        buf = wire.encode_sparse(np.asarray(m["delta"]), mag=wire_mag)
-                                    if fresh_np[i]:
-                                        join_payload = wire.encode_dense(
-                                            np.asarray(x if algorithm == "marina_p" else w), mag=wire_mag)
-                                        wire_bits += wire.measured_bits(join_payload)
-                                    wire_bits += wire.measured_bits(buf)
-                                    payloads[i] = buf
+                                if fresh_np[i]:
+                                    wire_bits += wire.measured_bits(join_payload)
+                                wire_bits += wire.measured_bits(payloads[i])
                             if spec.fault_rate > 0:
                                 from repro.transport import FaultInjector
 

@@ -1,0 +1,501 @@
+"""Fused on-device compressor -> bitstream encode kernels (Pallas TPU).
+
+The host codecs (repro/wire) top out around ~0.5 GB/s, which makes encoding
+the N per-worker compressed broadcasts of a MARINA-P round the downlink
+bottleneck at scale (ROADMAP "on-device encode path and codec speed").
+The kernels here fuse compressor selection and stream extraction into one
+VMEM pass and bit-pack with the word-aligned compare-and-sum layout of
+``kernels/pack.py``, so the packed uint32 words leave the device
+send-ready; the host contributes only the 16 fixed header/payload bytes.
+
+Fused paths — each **byte-identical** to the host codec on every input
+(asserted by the differential harness in tests/test_encode_diff.py):
+
+* :func:`topk_encode`  — block-TopK select -> (index, sign, magnitude)
+  streams -> packed words, ``== wire.encode_sparse(ops.block_topk(x))``.
+  Selection reuses kernels/topk.py's iterative-extraction semantics
+  (first-index tie-break, bit-identical to ``jax.lax.top_k``).
+* :func:`mask_encode`  — BernK counter-hash mask + scale + streams, seeded
+  on-device with ``kernels/randk.hash_uniform`` so the mask bit-matches the
+  SEED codec's receiver-side rematerialization (wire/seedonly.py, BERN
+  family with ``seed + round`` folded by the caller).
+* :func:`sparse_encode` — streams for an arbitrary already-sparsified
+  vector (the ``measure_wire`` call sites hold Q on device already).
+* :func:`dense_encode` — DENSE codec payload for full-sync rounds.
+* :func:`encode_rows` / :func:`encode_per_worker` — batched N-stream paths
+  (vmap over message rows / the on-device worker id) amortizing the
+  per-round fan-out of MARINA-style per-worker messages.
+
+Dynamic sizing: the SPARSE layout is compacted by nonzero count, so one
+scalar per message is read back to trim the word streams; everything else
+stays on device with static shapes. Compaction is a stable argsort on the
+validity mask (kept entries first, ascending index — exactly
+``np.nonzero`` order), which batches under ``jax.vmap`` unchanged.
+
+``device_encode_enabled`` is the routing policy for the integration points
+(wire/registry.py, core runs, train/downlink.py, fleet/cohort.py):
+explicit override > ``REPRO_DEVICE_ENCODE`` env (1/0/auto) > backend
+auto-detect (on for TPU, off for the interpret-mode CPU fallback, where
+the numpy codec is faster).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.wire import bitstream as bs
+from repro.wire.spec import (
+    MAG_BITS,
+    CodecID,
+    MagDType,
+    index_width,
+    mag_dtype,
+    pack_header,
+)
+
+from . import pack as _pack
+from .randk import hash_uniform
+from .runtime import resolve_interpret
+
+# Payload layouts mirror wire/sparse.py (the single source of the byte
+# format is DESIGN.md §3.1/§3.4; these structs must match _PAYLOAD there).
+_SPARSE_PAYLOAD = struct.Struct("<BxxxI")  # [u8 mag][pad x3][u32 count]
+_DENSE_PAYLOAD = struct.Struct("<Bxxx")    # [u8 mag][pad x3]
+
+DEVICE_ENCODE_ENV = "REPRO_DEVICE_ENCODE"
+
+
+def device_encode_enabled(override: bool | None = None) -> bool:
+    """Should an encode call site route through the fused device path?
+
+    Precedence: explicit ``override`` > ``REPRO_DEVICE_ENCODE`` (1/0/auto)
+    > backend auto-detect. Auto is on only for a real TPU backend: in
+    interpret mode the Pallas bodies run as traced Python, where the host
+    numpy codec is faster — the device path is for real accelerators (and
+    for the differential/byte-identity tests, which force it on).
+    """
+    if override is not None:
+        return bool(override)
+    v = os.environ.get(DEVICE_ENCODE_ENV, "auto").strip().lower()
+    if v in ("1", "true", "on", "yes"):
+        return True
+    if v in ("0", "false", "off", "no"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _valbits(v, m: MagDType):
+    """Bit pattern of ``v`` in the wire magnitude dtype, widened to u32.
+
+    Matches the host codec's ``v.astype(fdt).view(udt)`` exactly: one
+    round-to-nearest-even cast, then a pure bitcast.
+    """
+    if m == MagDType.FP32:
+        return jax.lax.bitcast_convert_type(v, jnp.uint32)
+    fdt = jnp.float16 if m == MagDType.FP16 else jnp.bfloat16
+    return jax.lax.bitcast_convert_type(v.astype(fdt), jnp.uint16).astype(jnp.uint32)
+
+
+def _emit_stream_bits(bits, sign_ref, mag_ref, valid_ref, m: MagDType):
+    """Shared SPARSE-stream epilogue over f32 *bit patterns*.
+
+    Works on bits, not floats, because the host codec's primitives are all
+    bitwise (np.signbit = bit 31, np.abs = clear bit 31, np.nonzero =
+    magnitude bits != 0) while XLA CPU flushes denormals to zero in float
+    arithmetic/compares — a ``val != 0`` here would silently elide a
+    denormal payload the host codec keeps. NaN/inf/-0.0 fall out exactly:
+    -0.0 has zero magnitude bits (elided like the host), NaN magnitude
+    bits are nonzero (kept like the host).
+    """
+    sign_ref[...] = bits >> jnp.uint32(31)
+    magbits = bits & jnp.uint32(0x7FFFFFFF)
+    if m == MagDType.FP32:
+        mag_ref[...] = magbits
+    else:
+        mag_ref[...] = _valbits(
+            jax.lax.bitcast_convert_type(magbits, jnp.float32), m
+        )
+    valid_ref[...] = (magbits != 0).astype(jnp.uint32)
+
+
+def _emit_streams(val, sign_ref, mag_ref, valid_ref, m: MagDType):
+    bits = jax.lax.bitcast_convert_type(val, jnp.uint32)
+    _emit_stream_bits(bits, sign_ref, mag_ref, valid_ref, m)
+
+
+def _sparse_streams_kernel(x_ref, sign_ref, mag_ref, valid_ref, *, m: MagDType):
+    """Streamify an arbitrary (already sparsified) vector block."""
+    _emit_streams(x_ref[...], sign_ref, mag_ref, valid_ref, m)
+
+
+def _mask_streams_kernel(x_ref, w_ref, sign_ref, mag_ref, valid_ref, *,
+                         keep_prob: float, seed: int, block: int, m: MagDType):
+    """Fused BernK: counter-hash mask + scale + streamify in one pass.
+
+    The hash is kernels/randk.hash_uniform on the *global* index, so the
+    mask is bit-identical to ops.bernk and to the SEED codec's
+    receiver-side rematerialization. ``worker`` is a runtime operand (not
+    a closure static) so the per-worker fan-out batches under vmap.
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]  # [1, b]
+    worker = w_ref[0]
+    local = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    gidx = (i * block + local).astype(jnp.uint32)
+    u = hash_uniform(gidx, seed, worker)
+    val = jnp.where(u < keep_prob, x / keep_prob, 0.0)
+    _emit_streams(val, sign_ref, mag_ref, valid_ref, m)
+
+
+def _topk_streams_kernel(x_ref, idx_ref, sign_ref, mag_ref, valid_ref, *,
+                         k: int, block: int, m: MagDType):
+    """Fused block-TopK: select + compact + streamify in one VMEM pass.
+
+    Selection is the exact iterative extraction of kernels/topk.py (k
+    rounds of masked argmax, first-index tie-break). The selected entries
+    are then compacted into the leading ``k`` output slots in ascending
+    index order — a rank (cumsum of the keep mask) equality against a
+    broadcast slot iota, the same scatter-free compare-and-sum idiom as
+    kernels/pack.py — so the concatenated per-block streams are already in
+    global np.nonzero order.
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]  # [1, b]
+    b = x.shape[-1]
+    absx = jnp.abs(x)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def body(_, carry):
+        remaining, keep = carry
+        mx = jnp.max(remaining)
+        is_max = remaining == mx
+        first = jnp.min(jnp.where(is_max, idx, b))
+        sel = idx == first
+        return remaining * (1.0 - sel) - sel, keep | sel
+
+    keep0 = jnp.zeros(x.shape, dtype=jnp.bool_)
+    _, keep = jax.lax.fori_loop(0, k, body, (absx.astype(jnp.float32), keep0))
+
+    ks = min(k, b)  # slots: never more than the block holds
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1          # [1, b]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, ks, b), 1)
+    hit = keep[:, None, :] & (rank[:, None, :] == slot)             # [1, ks, b]
+    # gather via integer compare-and-sum on the f32 bit patterns: exact for
+    # every payload (denormals would not survive a float-sum under FTZ)
+    xbits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    valbits = jnp.sum(jnp.where(hit, xbits[:, None, :], jnp.uint32(0)), axis=2)
+    gidx = (i * block + idx).astype(jnp.uint32)
+    idx_ref[...] = jnp.sum(jnp.where(hit, gidx[:, None, :], jnp.uint32(0)), axis=2)
+    _emit_stream_bits(valbits, sign_ref, mag_ref, valid_ref, m)
+
+
+def _dense_bits_kernel(x_ref, out_ref, *, m: MagDType):
+    """DENSE codec pass: raw value -> wire-dtype bit pattern (sign kept)."""
+    out_ref[...] = _valbits(x_ref[...], m)
+
+
+# ---------------------------------------------------------------------------
+# device pipelines (jitted, static shapes; the count is a traced scalar)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x, mult):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    return (jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]), d) if pad else (x, d)
+
+
+def _block_spec(block):
+    return pl.BlockSpec((1, block), lambda i: (i, 0))
+
+
+def _pack_stream(vals, *, width: int, interpret: bool):
+    """Word-pack a full-length stream on device; returns every word the
+    stream could need (callers trim to ``n_words(count, width)``)."""
+    n = vals.shape[-1]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    vpb, _ = _pack.word_block(width)
+    pad = (-n) % vpb
+    vp = jnp.pad(vals, (0, pad)) if pad else vals
+    nwords = -(-n * width // 32)
+    return _pack.pack_bits_device(vp, width=width, interpret=interpret)[:nwords]
+
+
+def _compact_streams(idx, sign, mag, valid):
+    """Move valid entries to the front in ascending-index order and zero
+    everything behind the count (so packing the full-length stream leaves
+    only zero bits past ``count * width`` — the host codec's padding)."""
+    order = jnp.argsort(jnp.logical_not(valid.astype(bool)), axis=-1, stable=True)
+    take = functools.partial(jnp.take_along_axis, indices=order, axis=-1)
+    idx, sign, mag = take(idx), take(sign), take(mag)
+    count = jnp.sum(valid, axis=-1).astype(jnp.uint32)
+    live = (
+        jax.lax.broadcasted_iota(jnp.uint32, idx.shape, idx.ndim - 1)
+        < count[..., None]
+    ).astype(jnp.uint32)
+    return idx * live, sign * live, mag * live, count
+
+
+def _pack_sparse(idx, sign, mag, valid, *, iw: int, m: MagDType, interpret: bool):
+    idx, sign, mag, count = _compact_streams(idx, sign, mag, valid)
+    return (
+        count,
+        _pack_stream(idx, width=iw, interpret=interpret),
+        _pack_stream(sign, width=1, interpret=interpret),
+        _pack_stream(mag, width=MAG_BITS[m], interpret=interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block", "iw", "interpret"))
+def _sparse_device(x, *, m: MagDType, block: int, iw: int, interpret: bool):
+    xp, d = _pad_to(x.astype(jnp.float32), block)
+    nblocks = xp.shape[-1] // block
+    sign, mag, valid = pl.pallas_call(
+        functools.partial(_sparse_streams_kernel, m=m),
+        grid=(nblocks,),
+        in_specs=[_block_spec(block)],
+        out_specs=[_block_spec(block)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((nblocks, block), jnp.uint32)] * 3,
+        interpret=interpret,
+    )(xp.reshape(nblocks, block))
+    idx = jnp.arange(nblocks * block, dtype=jnp.uint32)
+    flat = lambda a: a.reshape(-1)
+    return _pack_sparse(idx, flat(sign), flat(mag), flat(valid),
+                        iw=iw, m=m, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("keep_prob", "seed", "m", "block", "iw", "interpret")
+)
+def _mask_device(x, worker, *, keep_prob: float, seed: int, m: MagDType,
+                 block: int, iw: int, interpret: bool):
+    """``worker`` is a [1] int32 operand — vmap it for the per-worker path."""
+    xp, d = _pad_to(x.astype(jnp.float32), block)
+    nblocks = xp.shape[-1] // block
+    sign, mag, valid = pl.pallas_call(
+        functools.partial(_mask_streams_kernel, keep_prob=keep_prob, seed=seed,
+                          block=block, m=m),
+        grid=(nblocks,),
+        in_specs=[_block_spec(block), pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[_block_spec(block)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((nblocks, block), jnp.uint32)] * 3,
+        interpret=interpret,
+    )(xp.reshape(nblocks, block), worker)
+    idx = jnp.arange(nblocks * block, dtype=jnp.uint32)
+    flat = lambda a: a.reshape(-1)
+    return _pack_sparse(idx, flat(sign), flat(mag), flat(valid),
+                        iw=iw, m=m, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_per_block", "m", "block", "iw", "interpret")
+)
+def _topk_device(x, *, k_per_block: int, m: MagDType, block: int, iw: int,
+                 interpret: bool):
+    xp, d = _pad_to(x.astype(jnp.float32), block)
+    nblocks = xp.shape[-1] // block
+    ks = min(k_per_block, block)
+    out_spec = pl.BlockSpec((1, ks), lambda i: (i, 0))
+    idx, sign, mag, valid = pl.pallas_call(
+        functools.partial(_topk_streams_kernel, k=k_per_block, block=block, m=m),
+        grid=(nblocks,),
+        in_specs=[_block_spec(block)],
+        out_specs=[out_spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((nblocks, ks), jnp.uint32)] * 4,
+        interpret=interpret,
+    )(xp.reshape(nblocks, block))
+    flat = lambda a: a.reshape(-1)
+    return _pack_sparse(flat(idx), flat(sign), flat(mag), flat(valid),
+                        iw=iw, m=m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block", "interpret"))
+def _dense_device(x, *, m: MagDType, block: int, interpret: bool):
+    xp, d = _pad_to(x.astype(jnp.float32), block)
+    nblocks = xp.shape[-1] // block
+    bits = pl.pallas_call(
+        functools.partial(_dense_bits_kernel, m=m),
+        grid=(nblocks,),
+        in_specs=[_block_spec(block)],
+        out_specs=_block_spec(block),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), jnp.uint32),
+        interpret=interpret,
+    )(xp.reshape(nblocks, block))
+    return _pack_stream(bits.reshape(-1)[:d], width=MAG_BITS[m], interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# host assembly (16 fixed bytes + trimmed device words)
+# ---------------------------------------------------------------------------
+
+
+def _assemble_sparse(d: int, m: MagDType, count, widx, wsign, wmag) -> bytes:
+    count = int(count)
+    head = pack_header(CodecID.SPARSE, d) + _SPARSE_PAYLOAD.pack(int(m), count)
+    if count == 0:
+        return head
+    iw = index_width(d)
+    # one transfer for all three streams, then zero-copy trims
+    words = np.asarray(jnp.concatenate([widx, wsign, wmag]))
+    o1, o2 = widx.shape[0], widx.shape[0] + wsign.shape[0]
+    return head + b"".join(
+        words[o : o + bs.n_words(count, w)].tobytes()
+        for o, w in ((0, iw), (o1, 1), (o2, MAG_BITS[m]))
+    )
+
+
+def sparse_encode(x, *, mag="fp32", block: int = 1024,
+                  interpret: bool | None = None) -> bytes:
+    """SPARSE-codec encode of an already-sparsified vector, fully on
+    device. Byte-identical to ``wire.encode_sparse(np.asarray(x))``."""
+    m = mag_dtype(mag)
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    if d == 0:
+        return pack_header(CodecID.SPARSE, 0) + _SPARSE_PAYLOAD.pack(int(m), 0)
+    count, widx, wsign, wmag = _sparse_device(
+        x, m=m, block=block, iw=index_width(d),
+        interpret=resolve_interpret(interpret),
+    )
+    return _assemble_sparse(d, m, count, widx, wsign, wmag)
+
+
+def topk_encode(x, *, k_per_block: int, block: int = 1024, mag="fp32",
+                interpret: bool | None = None) -> bytes:
+    """Fused block-TopK compress + SPARSE encode. Byte-identical to
+    ``wire.encode_sparse(ops.block_topk(x, k_per_block=..., block=...))``."""
+    m = mag_dtype(mag)
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    count, widx, wsign, wmag = _topk_device(
+        x, k_per_block=k_per_block, m=m, block=block, iw=index_width(d),
+        interpret=resolve_interpret(interpret),
+    )
+    return _assemble_sparse(d, m, count, widx, wsign, wmag)
+
+
+def mask_encode(x, *, keep_prob: float, seed: int, worker: int = 0,
+                block: int = 1024, mag="fp32",
+                interpret: bool | None = None) -> bytes:
+    """Fused BernK compress + SPARSE encode, seeded on device.
+
+    Byte-identical to ``wire.encode_sparse(ops.bernk(x, keep_prob=...,
+    seed=..., worker=...))``; the mask bit-matches the SEED codec's BERN
+    rematerialization (pass ``seed = msg.seed + msg.round`` for parity
+    with wire/seedonly.apply_seed).
+    """
+    m = mag_dtype(mag)
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    count, widx, wsign, wmag = _mask_device(
+        x, jnp.asarray([worker], jnp.int32), keep_prob=keep_prob, seed=seed,
+        m=m, block=block, iw=index_width(d),
+        interpret=resolve_interpret(interpret),
+    )
+    return _assemble_sparse(d, m, count, widx, wsign, wmag)
+
+
+def dense_encode(x, *, mag="fp32", block: int = 1024,
+                 interpret: bool | None = None) -> bytes:
+    """DENSE-codec encode on device (full-sync broadcast rounds).
+    Byte-identical to ``wire.encode_dense(np.asarray(x))``."""
+    m = mag_dtype(mag)
+    x = jnp.asarray(x)
+    words = _dense_device(x, m=m, block=block,
+                          interpret=resolve_interpret(interpret))
+    return (
+        pack_header(CodecID.DENSE, x.shape[-1])
+        + _DENSE_PAYLOAD.pack(int(m))
+        + np.asarray(words).tobytes()
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched fan-out paths
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block", "iw", "interpret"))
+def _rows_device(X, *, m: MagDType, block: int, iw: int, interpret: bool):
+    """vmap of the sparse pipeline over message rows [n, d]."""
+    return jax.vmap(
+        lambda row: _sparse_device(row, m=m, block=block, iw=iw,
+                                   interpret=interpret)
+    )(X)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("keep_prob", "seed", "m", "block", "iw", "interpret")
+)
+def _workers_device(x, workers, *, keep_prob: float, seed: int, m: MagDType,
+                    block: int, iw: int, interpret: bool):
+    """vmap of the fused mask pipeline over the worker-id operand: one
+    shared input vector, N packed streams."""
+    return jax.vmap(
+        lambda w: _mask_device(x, w, keep_prob=keep_prob, seed=seed, m=m,
+                               block=block, iw=iw, interpret=interpret),
+        in_axes=(0,),
+    )(workers)
+
+
+def _assemble_rows(d, m, counts, widx, wsign, wmag):
+    return [
+        _assemble_sparse(d, m, counts[i], widx[i], wsign[i], wmag[i])
+        for i in range(len(counts))
+    ]
+
+
+def encode_rows(X, *, mag="fp32", block: int = 1024,
+                interpret: bool | None = None) -> list[bytes]:
+    """Batched :func:`sparse_encode` over message rows ``X [n, d]`` —
+    one vmapped device pass, n send-ready buffers."""
+    m = mag_dtype(mag)
+    X = jnp.asarray(X)
+    n, d = X.shape
+    if d == 0:
+        head = pack_header(CodecID.SPARSE, 0) + _SPARSE_PAYLOAD.pack(int(m), 0)
+        return [head] * n
+    counts, widx, wsign, wmag = _rows_device(
+        X, m=m, block=block, iw=index_width(d),
+        interpret=resolve_interpret(interpret),
+    )
+    return _assemble_rows(d, m, np.asarray(counts), widx, wsign, wmag)
+
+
+def encode_per_worker(x, *, n_workers: int, keep_prob: float, seed: int,
+                      mode: str = "ind", block: int = 1024, mag="fp32",
+                      interpret: bool | None = None) -> list[bytes]:
+    """N per-worker BernK streams from one shared input, batched on device.
+
+    ``mode="ind"`` hashes each worker id independently (MARINA-P ind
+    broadcast); ``mode="same"`` encodes worker 0 once and repeats the
+    buffer (every message is identical). Each buffer is byte-identical to
+    the matching :func:`mask_encode` call.
+    """
+    m = mag_dtype(mag)
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    if mode == "same":
+        buf = mask_encode(x, keep_prob=keep_prob, seed=seed, worker=0,
+                          block=block, mag=mag, interpret=interpret)
+        return [buf] * n_workers
+    if mode != "ind":
+        raise ValueError(f"encode_per_worker mode must be ind|same, got {mode!r}")
+    workers = jnp.arange(n_workers, dtype=jnp.int32).reshape(n_workers, 1)
+    counts, widx, wsign, wmag = _workers_device(
+        x, workers, keep_prob=keep_prob, seed=seed, m=m, block=block,
+        iw=index_width(d), interpret=resolve_interpret(interpret),
+    )
+    return _assemble_rows(d, m, np.asarray(counts), widx, wsign, wmag)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _l1_subgrad_kernel(a_ref, x_ref, g_ref):
     i = pl.program_id(0)
@@ -35,8 +37,9 @@ def _l1_subgrad_kernel(a_ref, x_ref, g_ref):
 
 
 def l1_subgrad(A: jax.Array, x: jax.Array, *, row_block: int = 128,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """A: [m, d] (m % row_block == 0, d % 128 == 0); x: [d] -> g: [d]."""
+    interpret = resolve_interpret(interpret)
     m, d = A.shape
     assert m % row_block == 0 and d % 128 == 0, (m, d)
     grid = (m // row_block,)

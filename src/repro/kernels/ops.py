@@ -1,9 +1,10 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernel bodies execute in Python for correctness validation) and False on a
-real TPU backend. Shapes are padded to tile multiples and unpadded here so
-callers can pass arbitrary d (e.g. the paper's d=1000).
+``interpret`` defaults to the shared policy in kernels/runtime.py: True
+off-TPU (this container is CPU-only; the kernel bodies execute in Python
+for correctness validation), False on a real TPU backend, overridable via
+``REPRO_PALLAS_INTERPRET``. Shapes are padded to tile multiples and
+unpadded here so callers can pass arbitrary d (e.g. the paper's d=1000).
 """
 from __future__ import annotations
 
@@ -17,10 +18,7 @@ from . import pack as _pack
 from . import permk as _permk
 from . import randk as _randk
 from . import topk as _topk
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .runtime import default_interpret as _default_interpret
 
 
 def _pad_to(x, mult):

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def word_block(width: int, target: int = 512) -> tuple[int, int]:
     """(values_per_block, words_per_block): the smallest word-aligned value
@@ -71,8 +73,14 @@ def _unpack_kernel(w_ref, out_ref, *, width: int, vpb: int):
     out_ref[...] = ((lo | hi) & mask).astype(jnp.uint32)
 
 
-def pack_bits_device(values: jax.Array, *, width: int, interpret: bool = True) -> jax.Array:
-    """values: [n] uint32 (n % values_per_block == 0). Returns packed words."""
+def pack_bits_device(values: jax.Array, *, width: int,
+                     interpret: bool | None = None) -> jax.Array:
+    """values: [n] uint32 (n % values_per_block == 0). Returns packed words.
+
+    ``interpret=None`` auto-detects via kernels/runtime.py (compiled on a
+    real TPU, interpret under CPU tests; ``REPRO_PALLAS_INTERPRET`` forces).
+    """
+    interpret = resolve_interpret(interpret)
     vpb, wpb = word_block(width)
     n = values.shape[-1]
     assert n % vpb == 0, (n, vpb)
@@ -88,8 +96,10 @@ def pack_bits_device(values: jax.Array, *, width: int, interpret: bool = True) -
     return out.reshape(nblocks * wpb)
 
 
-def unpack_bits_device(words: jax.Array, *, width: int, interpret: bool = True) -> jax.Array:
+def unpack_bits_device(words: jax.Array, *, width: int,
+                       interpret: bool | None = None) -> jax.Array:
     """words: [nw] uint32 (nw % words_per_block == 0). Returns unpacked values."""
+    interpret = resolve_interpret(interpret)
     vpb, wpb = word_block(width)
     nw = words.shape[-1]
     assert nw % wpb == 0, (nw, wpb)

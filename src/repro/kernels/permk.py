@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _rotk_apply_kernel(w_ref, delta_ref, rot_ref, out_ref, *, n: int, worker: int, block: int):
     i = pl.program_id(0)
@@ -27,8 +29,10 @@ def _rotk_apply_kernel(w_ref, delta_ref, rot_ref, out_ref, *, n: int, worker: in
 
 
 def rotk_apply(w: jax.Array, delta: jax.Array, rotation: jax.Array, *, n: int,
-               worker: int, block: int = 1024, interpret: bool = True) -> jax.Array:
+               worker: int, block: int = 1024,
+               interpret: bool | None = None) -> jax.Array:
     """w, delta: [d]; rotation: int32 scalar array. Returns w + Q_i(delta)."""
+    interpret = resolve_interpret(interpret)
     d = w.shape[-1]
     assert d % block == 0, (d, block)
     nblocks = d // block

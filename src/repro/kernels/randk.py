@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 _M1 = 2654435761
 _M2 = 2246822519
 
@@ -44,7 +46,8 @@ def _bernk_kernel(x_ref, out_ref, *, keep_prob: float, seed: int, worker: int, b
 
 
 def bernk_compress(x: jax.Array, *, keep_prob: float, seed: int, worker: int = 0,
-                   block: int = 1024, interpret: bool = True) -> jax.Array:
+                   block: int = 1024, interpret: bool | None = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     d = x.shape[-1]
     assert d % block == 0, (d, block)
     nblocks = d // block

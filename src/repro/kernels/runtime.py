@@ -1,0 +1,40 @@
+"""Shared Pallas runtime configuration for the kernels package.
+
+Every kernel wrapper in this package takes ``interpret: bool | None``;
+``None`` resolves here so the whole package follows one policy:
+
+* ``REPRO_PALLAS_INTERPRET=1`` (or ``true``/``on``/``yes``) — force
+  interpret mode everywhere (CPU correctness runs, CI);
+* ``REPRO_PALLAS_INTERPRET=0`` (``false``/``off``/``no``) — force compiled
+  kernels (only meaningful on a real TPU backend);
+* unset / ``auto`` — interpret off on a real TPU, on everywhere else.
+
+The value is read at trace time: jitted wrappers cache on the *resolved*
+``interpret`` only through their first trace with ``interpret=None``, so
+set the variable before the first kernel call (conftest/CI do).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = ("1", "true", "on", "yes")
+_FALSE = ("0", "false", "off", "no")
+
+
+def default_interpret() -> bool:
+    """Resolve the package-wide interpret default (see module docstring)."""
+    v = os.environ.get(ENV_VAR, "auto").strip().lower()
+    if v in _TRUE:
+        return True
+    if v in _FALSE:
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> :func:`default_interpret`, else the explicit value."""
+    return default_interpret() if interpret is None else bool(interpret)

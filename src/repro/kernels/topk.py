@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _topk_block_kernel(x_ref, out_ref, *, k: int):
     x = x_ref[...]  # [1, b]
@@ -43,8 +45,9 @@ def _topk_block_kernel(x_ref, out_ref, *, k: int):
 
 
 def block_topk_compress(x: jax.Array, *, k_per_block: int, block: int = 1024,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """x: [d] (d % block == 0). Returns the sparsified vector (dense layout)."""
+    interpret = resolve_interpret(interpret)
     d = x.shape[-1]
     assert d % block == 0, (d, block)
     nblocks = d // block

@@ -49,6 +49,13 @@ def tree_size(tree) -> int:
     return sum(math.prod(l.shape) if l.shape else 1 for l in jax.tree.leaves(tree))
 
 
+def _use_device_encode(device_encode) -> bool:
+    """Route a downlink serialization through kernels/encode.py?"""
+    from repro.kernels import encode as kenc
+
+    return kenc.device_encode_enabled(device_encode)
+
+
 def _track_wire(tracker, step, res: dict) -> dict:
     """Log a measure_wire result as downlink/* metrics; returns ``res``."""
     if tracker is not None:
@@ -162,24 +169,29 @@ class MarinaPDownlink:
         )
         return sum(jax.tree.leaves(sq)) / self.n_workers
 
-    def _dense_buf(self, server_new, mag):
+    def _dense_buf(self, server_new, mag, device_encode=None):
         """Serialize the full model for a sync broadcast."""
         import jax.flatten_util  # noqa: F401  (registers jax.flatten_util)
         import numpy as np
 
         from repro import wire
 
-        flat = np.asarray(
-            jax.flatten_util.ravel_pytree(
-                jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
-            )[0]
-        )
-        return wire.encode_dense(flat, mag=mag)
+        flat = jax.flatten_util.ravel_pytree(
+            jax.tree.map(lambda t: t.astype(jnp.float32), server_new)
+        )[0]
+        if _use_device_encode(device_encode):
+            from repro.kernels import encode as kenc
 
-    def _sparse_bufs(self, k_comp, server_new, server_old, mag):
+            return kenc.dense_encode(flat, mag=mag)
+        return wire.encode_dense(np.asarray(flat), mag=mag)
+
+    def _sparse_bufs(self, k_comp, server_new, server_old, mag,
+                     device_encode=None):
         """Per-worker compressed-delta buffers, replaying :meth:`round`'s
         randomness over the raveled tree. 'same' mode encodes once and
-        repeats the buffer (every worker's message is identical)."""
+        repeats the buffer (every worker's message is identical); the
+        device path batches the per-worker rows through one vmapped
+        encode (kernels/encode.encode_rows)."""
         import numpy as np
 
         from repro import wire
@@ -187,7 +199,7 @@ class MarinaPDownlink:
         n = self.n_workers
         leaves_new, _ = jax.tree.flatten(server_new)
         leaves_old = jax.tree.leaves(server_old)
-        bufs = []
+        rows = []
         for widx in range(1 if self.mode == "same" else n):
             parts = []
             for li, (xn, xo) in enumerate(zip(leaves_new, leaves_old)):
@@ -202,14 +214,20 @@ class MarinaPDownlink:
                 else:  # same
                     m = _leaf_bern_mask(lk, xn.shape, self.frac)
                     q = jnp.where(m, delta / self.frac, 0)
-                parts.append(np.asarray(q).reshape(-1))
-            bufs.append(wire.encode_sparse(np.concatenate(parts), mag=mag))
+                parts.append(q.reshape(-1))
+            rows.append(jnp.concatenate(parts))
+        if _use_device_encode(device_encode):
+            from repro.kernels import encode as kenc
+
+            bufs = kenc.encode_rows(jnp.stack(rows), mag=mag)
+        else:
+            bufs = [wire.encode_sparse(np.asarray(r), mag=mag) for r in rows]
         if self.mode == "same":
             bufs = bufs * n
         return bufs
 
     def measure_wire(self, key, server_new, server_old, *, mag="fp32",
-                     tracker=None, step=None) -> dict:
+                     device_encode=None, tracker=None, step=None) -> dict:
         """Host-side wire measurement (measure_wire=True path).
 
         Replays this round's randomness exactly as :meth:`round` consumes it,
@@ -218,7 +236,10 @@ class MarinaPDownlink:
         analytic model's prediction (value_bits matched to ``mag``) and the
         O(1) seed-only alternative (DESIGN.md §3.5). Not jittable — this is
         the accounting/verification path, not the training hot path.
-        ``tracker`` logs the result as a ``downlink/*`` metric event.
+        ``device_encode`` routes serialization through the fused Pallas
+        encode kernels (byte-identical; None defers to
+        ``REPRO_DEVICE_ENCODE``/backend auto-detect). ``tracker`` logs the
+        result as a ``downlink/*`` metric event.
         """
         import numpy as np
 
@@ -242,14 +263,16 @@ class MarinaPDownlink:
             d,
         )
         if c:
-            bits = float(wire.measured_bits(self._dense_buf(server_new, mag)))
+            bits = float(wire.measured_bits(
+                self._dense_buf(server_new, mag, device_encode)))
             return _track_wire(tracker, step, {
                 "full_sync": True, "bits_mean": bits, "bits_per_worker": [bits] * n,
                 "bits_seed": float(wire.measured_bits(seed_buf)),
                 "bits_analytic": cm.dense_bits()})
         per_worker = [
             float(wire.measured_bits(buf))
-            for buf in self._sparse_bufs(k_comp, server_new, server_old, mag)
+            for buf in self._sparse_bufs(k_comp, server_new, server_old, mag,
+                                         device_encode)
         ]
         return _track_wire(tracker, step, {
             "full_sync": False,
@@ -260,7 +283,8 @@ class MarinaPDownlink:
         })
 
     def broadcast_via(self, fleet, key, server_new, server_old, *, mag="fp32",
-                      force_sync=False, tracker=None, step=None) -> dict:
+                      device_encode=None, force_sync=False, tracker=None,
+                      step=None) -> dict:
         """Push this round's broadcast through a :class:`repro.transport.Fleet`.
 
         Replays the same randomness :meth:`round` consumed (pass the same
@@ -275,12 +299,13 @@ class MarinaPDownlink:
         if tracker is not None:
             fleet.attach_tracker(tracker)
         with maybe_span(tracker, "broadcast", full_sync=c) as bsp:
-            with maybe_span(tracker, "encode"):
+            with maybe_span(tracker, "encode",
+                            device=_use_device_encode(device_encode)):
                 if c:
-                    payloads = [self._dense_buf(server_new, mag)]
+                    payloads = [self._dense_buf(server_new, mag, device_encode)]
                 else:
                     payloads = self._sparse_bufs(
-                        k_comp, server_new, server_old, mag)
+                        k_comp, server_new, server_old, mag, device_encode)
             if c:
                 oks = fleet.broadcast(payloads[0], sync=True)
             else:
@@ -344,24 +369,34 @@ class EF21PDownlink:
     def init_workers(self, server_params):
         return self.init_shift(server_params)
 
-    def measure_wire(self, key, server_new, shift, *, mag="fp32",
-                     tracker=None, step=None) -> dict:
-        """Host-side wire measurement of one EF21-P broadcast (the block-TopK
-        compressed difference, identical for every worker)."""
+    def _delta_buf(self, server_new, shift, mag, device_encode=None):
+        """Serialize the block-TopK compressed difference over the raveled
+        tree (the broadcast message, identical for every worker)."""
         import numpy as np
 
         from repro import wire
 
         comp = self.comp
-        d = tree_size(server_new)
-        cm = CommModel(d=d, value_bits=wire.MAG_BITS[wire.mag_dtype(mag)])
         parts = [
-            np.asarray(
-                comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
-            )
+            comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
             for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
         ]
-        buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+        delta = jnp.concatenate(parts)
+        if _use_device_encode(device_encode):
+            from repro.kernels import encode as kenc
+
+            return kenc.sparse_encode(delta, mag=mag)
+        return wire.encode_sparse(np.asarray(delta), mag=mag)
+
+    def measure_wire(self, key, server_new, shift, *, mag="fp32",
+                     device_encode=None, tracker=None, step=None) -> dict:
+        """Host-side wire measurement of one EF21-P broadcast (the block-TopK
+        compressed difference, identical for every worker)."""
+        from repro import wire
+
+        d = tree_size(server_new)
+        cm = CommModel(d=d, value_bits=wire.MAG_BITS[wire.mag_dtype(mag)])
+        buf = self._delta_buf(server_new, shift, mag, device_encode)
         frac = self.k_per_block / self.block
         return _track_wire(tracker, step, {
             "full_sync": False,
@@ -371,7 +406,8 @@ class EF21PDownlink:
         })
 
     def broadcast_via(self, fleet, key, server_new, shift, *, mag="fp32",
-                      force_sync=False, tracker=None, step=None) -> dict:
+                      device_encode=None, force_sync=False, tracker=None,
+                      step=None) -> dict:
         """Deliver one EF21-P broadcast through a transport Fleet.
 
         A sync round ships the full model (``w := x`` re-anchor) as a
@@ -389,24 +425,22 @@ class EF21PDownlink:
             fleet.attach_tracker(tracker)
         with maybe_span(tracker, "broadcast",
                         full_sync=bool(force_sync)) as bsp:
-            with maybe_span(tracker, "encode"):
+            with maybe_span(tracker, "encode",
+                            device=_use_device_encode(device_encode)):
                 if force_sync:
-                    flat = np.asarray(
-                        jax.flatten_util.ravel_pytree(
-                            jax.tree.map(
-                                lambda t: t.astype(jnp.float32), server_new)
-                        )[0]
-                    )
-                    buf = wire.encode_dense(flat, mag=mag)
+                    flat = jax.flatten_util.ravel_pytree(
+                        jax.tree.map(
+                            lambda t: t.astype(jnp.float32), server_new)
+                    )[0]
+                    if _use_device_encode(device_encode):
+                        from repro.kernels import encode as kenc
+
+                        buf = kenc.dense_encode(flat, mag=mag)
+                    else:
+                        buf = wire.encode_dense(np.asarray(flat), mag=mag)
                 else:
-                    comp = self.comp
-                    parts = [
-                        np.asarray(
-                            comp(None, (xn.astype(jnp.float32) - w.astype(jnp.float32)).reshape(-1))
-                        )
-                        for xn, w in zip(jax.tree.leaves(server_new), jax.tree.leaves(shift))
-                    ]
-                    buf = wire.encode_sparse(np.concatenate(parts), mag=mag)
+                    buf = self._delta_buf(server_new, shift, mag,
+                                          device_encode)
             oks = fleet.broadcast(buf, sync=bool(force_sync))
             fleet.drain()
             res = {

@@ -64,17 +64,41 @@ def codec_for(comp: C.Compressor) -> CodecID:
     return CodecID.SPARSE
 
 
-def encode(x, comp: Optional[C.Compressor] = None, *, mag="fp32") -> bytes:
+def _device_encodable(x) -> bool:
+    """True when ``x`` is a jax array the fused device encoder can take
+    without a host round-trip first."""
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return False
+    return isinstance(x, jax.Array)
+
+
+def encode(x, comp: Optional[C.Compressor] = None, *, mag="fp32",
+           device_encode: Optional[bool] = None) -> bytes:
     """Encode a compressor output with its family's natural payload codec.
 
     SEED-family compressors still encode here as SPARSE (explicit payload):
     producing a true O(1) SEED message requires the RNG coordinates, not
     just the output — use :func:`repro.wire.encode_seed` with a
     :class:`SeedMessage` for that path.
+
+    ``device_encode`` selects the fused Pallas encode path
+    (kernels/encode.py) for SPARSE/DENSE payloads when ``x`` is already a
+    device array: True forces it, False forces the host numpy codec, None
+    defers to ``REPRO_DEVICE_ENCODE`` / backend auto-detection. Both paths
+    produce byte-identical streams (tests/test_encode_diff.py).
     """
     codec = codec_for(comp) if comp is not None else CodecID.SPARSE
     if codec == CodecID.NATURAL:
         return encode_natural(x)
+    if codec in (CodecID.DENSE, CodecID.SPARSE) and _device_encodable(x):
+        from repro.kernels import encode as kenc
+
+        if kenc.device_encode_enabled(device_encode):
+            if codec == CodecID.DENSE:
+                return kenc.dense_encode(x, mag=mag)
+            return kenc.sparse_encode(x, mag=mag)
     if codec == CodecID.DENSE:
         return encode_dense(x, mag=mag)
     return encode_sparse(x, mag=mag)
